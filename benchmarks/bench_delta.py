@@ -1,0 +1,30 @@
+"""Fig. 5 — quality/time trade-off of the two-hop range δ in GEO."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import metrics, ordering
+
+from .common import bench_graph, emit
+
+
+def run(scale: int = 11, edge_factor: int = 10) -> None:
+    g = bench_graph(scale, edge_factor)
+    ks = (4, 8, 16, 32, 64, 128)
+    base_delta = max(1, g.num_edges // 128)
+    for mult, label in [(0, "0"), (1, "1x"), (10, "10x"), (100, "100x")]:
+        delta = max(1, base_delta * mult) if mult else 1
+        t0 = time.perf_counter()
+        order = ordering.geo_order(g, delta=delta, seed=0)
+        t = (time.perf_counter() - t0) * 1e6
+        rf = np.mean([
+            metrics.replication_factor_ordered(g.src[order], g.dst[order], k, g.num_vertices)
+            for k in ks
+        ])
+        emit(f"fig5/delta_{label}", t, f"avg_rf={rf:.3f}")
+
+
+if __name__ == "__main__":
+    run()

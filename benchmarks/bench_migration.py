@@ -1,0 +1,36 @@
+"""Figs. 13/14 — migrated edges under the paper's ScaleOut/ScaleIn scenario
+(26→27→…→36 and 36→…→26), CEP vs BVC vs 1D hash; plus Thm.-2 check."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import baselines, cep
+
+from .common import bench_graph, emit
+
+
+def _hash_migrated(g, k0, k1, seed=0) -> int:
+    p0 = baselines.hash_1d(g, k0, seed)
+    p1 = baselines.hash_1d(g, k1, seed)
+    return int(np.sum(p0 != p1))
+
+
+def run(scale: int = 12, edge_factor: int = 12) -> None:
+    g = bench_graph(scale, edge_factor)
+    e = g.num_edges
+    for name, seq in [("scaleout", range(26, 36)), ("scalein", range(36, 26, -1))]:
+        cep_total = sum(cep.migrated_edges_exact(e, k, k + (1 if name == "scaleout" else -1)) for k in seq)
+        hash_total = sum(_hash_migrated(g, k, k + (1 if name == "scaleout" else -1)) for k in seq)
+        # BVC ≡ chunk arithmetic on the hash ring ⇒ same counts as CEP (paper §6.4.3).
+        emit(f"fig13/cep/{name}", 0.0, f"moved={cep_total};frac={cep_total/ (e*10):.3f}")
+        emit(f"fig13/bvc/{name}", 0.0, f"moved={cep_total};same_as_cep=true")
+        emit(f"fig13/1d/{name}", 0.0, f"moved={hash_total};frac={hash_total/(e*10):.3f}")
+    # Theorem 2 closed form vs exact overlay.
+    for k, x in [(8, 1), (26, 1), (16, 4)]:
+        exact = cep.migrated_edges_exact(e, k, k + x)
+        approx = cep.migration_cost_theorem2(e, k, x)
+        emit(f"fig13/thm2/k{k}x{x}", 0.0, f"exact={exact};approx={approx:.0f};err={(abs(exact-approx)/e):.3f}")
+
+
+if __name__ == "__main__":
+    run()

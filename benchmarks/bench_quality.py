@@ -1,0 +1,62 @@
+"""Figs. 10/11 — replication factor of GEO+CEP vs partitioners & orderings."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import baselines, metrics, ordering
+
+from .common import bench_graph, emit, timeit
+
+
+def _rf_part(g, part, k):
+    return metrics.replication_factor(g.src, g.dst, part, k, g.num_vertices)
+
+
+def _rf_order(g, order, k):
+    return metrics.replication_factor_ordered(g.src[order], g.dst[order], k, g.num_vertices)
+
+
+def run(scale: int = 12, edge_factor: int = 12) -> None:
+    g = bench_graph(scale, edge_factor)
+    t0 = time.perf_counter()
+    geo = ordering.geo_order(g, seed=0)
+    t_geo = (time.perf_counter() - t0) * 1e6
+    emit("fig11/geo_preprocess", t_geo, f"V={g.num_vertices};E={g.num_edges}")
+
+    ks = (4, 16, 64, 128)
+    # --- Fig 10: partitioners ---
+    for k in ks:
+        emit(f"fig10/geo+cep/k{k}", 0.0, f"rf={_rf_order(g, geo, k):.3f}")
+    for name, fn in [
+        ("1d", baselines.hash_1d),
+        ("2d", baselines.hash_2d),
+        ("dbh", baselines.dbh),
+        ("bvc", baselines.bvc_partition),
+    ]:
+        for k in ks:
+            emit(f"fig10/{name}/k{k}", 0.0, f"rf={_rf_part(g, fn(g, k), k):.3f}")
+    for k in (4, 16):  # slow baselines at small k only
+        emit(f"fig10/ne/k{k}", 0.0, f"rf={_rf_part(g, baselines.ne_partition(g, k), k):.3f}")
+        emit(f"fig10/hdrf/k{k}", 0.0, f"rf={_rf_part(g, baselines.hdrf(g, k), k):.3f}")
+        vp = baselines.spectral_vertex_partition(g, k)
+        ep = baselines.vertex_to_edge_partition(g, vp, k)
+        emit(f"fig10/mts/k{k}", 0.0, f"rf={_rf_part(g, ep, k):.3f}")
+
+    # --- Fig 11: orderings (all consumed by CEP) ---
+    orders = {
+        "geo": geo,
+        "rcm": baselines.rcm_edge_order(g),
+        "bfs": ordering.bfs_edge_order(g, seed=0),
+        "deg": ordering.degree_edge_order(g),
+        "def": ordering.default_edge_order(g),
+        "rand": ordering.random_edge_order(g, seed=0),
+    }
+    for name, o in orders.items():
+        rfs = [_rf_order(g, o, k) for k in ks]
+        emit(f"fig11/{name}", 0.0, "rf_k4..128=" + "/".join(f"{r:.3f}" for r in rfs))
+
+
+if __name__ == "__main__":
+    run()

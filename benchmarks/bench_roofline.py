@@ -1,0 +1,41 @@
+"""§Roofline — render the dry-run artifact table (reads artifacts/dryrun)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import emit
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run() -> None:
+    if not ART.exists():
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for mesh_dir in sorted(ART.iterdir()):
+        if not mesh_dir.is_dir():
+            continue
+        for f in sorted(mesh_dir.glob("*.json")):
+            rec = json.loads(f.read_text())
+            name = f"roofline/{mesh_dir.name}/{rec['arch']}/{rec['shape']}"
+            if rec.get("skipped"):
+                emit(name, 0.0, "skipped=" + rec.get("reason", "")[:60])
+                continue
+            if not rec.get("ok"):
+                emit(name, 0.0, "FAILED=" + rec.get("error", "")[:80])
+                continue
+            r = rec["roofline"]
+            mem = rec["memory_analysis"].get("total_per_device_bytes", 0) / 2**30
+            emit(
+                name,
+                rec.get("compile_s", 0) * 1e6,
+                f"bottleneck={r['bottleneck']};tc={r['t_compute_s']:.2e};"
+                f"tm={r['t_memory_s']:.2e};tn={r['t_collective_s']:.2e};"
+                f"useful={r['useful_flops_ratio']:.2f};mfu_ub={r['mfu_upper_bound']:.3f};"
+                f"mem_GiB={mem:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

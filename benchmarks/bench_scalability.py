@@ -1,0 +1,60 @@
+"""Fig. 15 — GEO scalability: elapsed time vs RMAT size / edge factor, with a
+linear fit demonstrating O(E)-ish practical scaling (billion-edge runs are
+extrapolated; single-core container)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ordering
+from repro.core.graph import rmat_graph
+
+from .common import emit
+
+
+def run() -> None:
+    sizes = []
+    times = []
+    for scale, ef in [(10, 8), (11, 8), (12, 8), (12, 16), (13, 16)]:
+        g = rmat_graph(scale, ef, seed=1)
+        t0 = time.perf_counter()
+        ordering.geo_order(g, seed=0)
+        t = time.perf_counter() - t0
+        sizes.append(g.num_edges)
+        times.append(t)
+        emit(f"fig15/rmat_s{scale}_ef{ef}", t * 1e6, f"E={g.num_edges};us_per_edge={t*1e6/g.num_edges:.2f}")
+    # Linear fit t = a·E + b: report per-edge cost + extrapolation to 1B edges.
+    a, b = np.polyfit(sizes, times, 1)
+    emit("fig15/linear_fit", 0.0, f"us_per_edge={a*1e6:.3f};extrapolated_1B_edges_s={a*1e9 + b:.0f}")
+
+    # Beyond-paper: block-parallel GEO (the paper's §7 future work).
+    from repro.core import metrics
+
+    g = rmat_graph(13, 10, seed=1)
+    seq = ordering.geo_order(g, seed=0)
+    rf_seq = np.mean([
+        metrics.replication_factor_ordered(g.src[seq], g.dst[seq], k, g.num_vertices)
+        for k in (4, 16, 64)
+    ])
+    for workers in (2, 4, 8):
+        for bal in (False, True):
+            t0 = time.perf_counter()
+            par, counts = ordering.parallel_geo_order(g, workers=workers, seed=0, balance_edges=bal)
+            t = time.perf_counter() - t0
+            rf = np.mean([
+                metrics.replication_factor_ordered(g.src[par], g.dst[par], k, g.num_vertices)
+                for k in (4, 16, 64)
+            ])
+            # Wall-clock on a real cluster ≈ max-region fraction of total.
+            eff = t * max(counts) / max(sum(counts), 1)
+            emit(
+                f"parallel_geo/w{workers}_{'edgebal' if bal else 'vertbal'}",
+                t * 1e6,
+                f"rf_ratio_vs_seq={rf/rf_seq:.3f};cluster_wallclock_est_us={eff*1e6:.0f};"
+                f"load_balance={max(counts)/(sum(counts)/len(counts)):.2f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

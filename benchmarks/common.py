@@ -1,0 +1,27 @@
+"""Shared benchmark helpers. Output contract: ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *, repeats: int = 3, number: int = 1) -> float:
+    """Best-of wall time per call, in microseconds."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def bench_graph(scale: int = 12, edge_factor: int = 12, seed: int = 0):
+    from repro.core.graph import rmat_graph
+
+    return rmat_graph(scale, edge_factor, seed=seed)

@@ -1,0 +1,43 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see common.emit). Individual benches:
+``python -m benchmarks.bench_quality`` etc. Select subsets with
+``python -m benchmarks.run fig9 table2``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    ("fig9_partition_time", "benchmarks.bench_partition_time"),
+    ("fig10_11_quality", "benchmarks.bench_quality"),
+    ("fig5_delta", "benchmarks.bench_delta"),
+    ("fig13_migration", "benchmarks.bench_migration"),
+    ("fig15_scalability", "benchmarks.bench_scalability"),
+    ("table2_theory", "benchmarks.bench_theory"),
+    ("table6_apps", "benchmarks.bench_apps"),
+    ("elastic_lm", "benchmarks.bench_elastic_lm"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    import importlib
+
+    wanted = [a.lower() for a in sys.argv[1:]]
+    print("name,us_per_call,derived")
+    for tag, modname in MODULES:
+        if wanted and not any(w in tag for w in wanted):
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(modname)
+        try:
+            mod.run()
+            print(f"# {tag}: done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep the suite going; a failed bench is a bug
+            print(f"# {tag}: FAILED {type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

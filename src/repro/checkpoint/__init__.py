@@ -1,0 +1,1 @@
+from . import store  # noqa: F401

@@ -1,0 +1,15 @@
+"""qwen3-8b [dense] — GQA kv=8, qk_norm. [hf:Qwen/Qwen3-8B; hf]"""
+import dataclasses
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b", family="dense",
+    num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=12288, vocab_size=151936,
+    qk_norm=True, rope_theta=1_000_000.0, tie_embeddings=False,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512,
+)

@@ -1,0 +1,1 @@
+from . import controller, expert_place, resharder  # noqa: F401

@@ -1,0 +1,104 @@
+"""Elastic-cluster controller: heartbeats, preemption, stragglers, rescale.
+
+Host processes (real or simulated) report heartbeats with step progress; the
+controller detects dead hosts (missed beats) and stragglers (progress lag),
+and emits ScaleEvents whose migration plans come from CEP — so reacting to a
+spot-instance preemption costs an O(k) plan + Thm.-2-minimal data movement,
+which is exactly the paper's motivating scenario (§1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from ..core import cep
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_beat: float
+    step: int
+    alive: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleEvent:
+    kind: str  # "scale_in" | "scale_out" | "straggler"
+    k_old: int
+    k_new: int
+    lost_hosts: tuple
+    plan_edges_moved_frac: float
+    reason: str
+
+
+class ElasticController:
+    def __init__(
+        self,
+        num_hosts: int,
+        *,
+        dead_after_s: float = 10.0,
+        straggler_lag_steps: int = 50,
+        state_elements: int = 1_000_000,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.clock = clock
+        self.dead_after_s = dead_after_s
+        self.straggler_lag_steps = straggler_lag_steps
+        self.state_elements = state_elements
+        now = self.clock()
+        self.hosts = {h: HostState(h, now, 0) for h in range(num_hosts)}
+        self.events: list[ScaleEvent] = []
+
+    @property
+    def k(self) -> int:
+        return sum(1 for h in self.hosts.values() if h.alive)
+
+    def heartbeat(self, host_id: int, step: int) -> None:
+        h = self.hosts[host_id]
+        h.last_beat = self.clock()
+        h.step = max(h.step, step)
+
+    def add_hosts(self, n: int) -> ScaleEvent:
+        k_old = self.k
+        base = max(self.hosts) + 1 if self.hosts else 0
+        now = self.clock()
+        for i in range(n):
+            self.hosts[base + i] = HostState(base + i, now, 0)
+        return self._emit("scale_out", k_old, self.k, (), f"+{n} provisioned hosts")
+
+    def poll(self) -> Optional[ScaleEvent]:
+        """Detect failures/stragglers; emit at most one event per poll."""
+        now = self.clock()
+        dead = [h.host_id for h in self.hosts.values() if h.alive and now - h.last_beat > self.dead_after_s]
+        if dead:
+            k_old = self.k
+            for hid in dead:
+                self.hosts[hid].alive = False
+            return self._emit(
+                "scale_in", k_old, self.k, tuple(dead), f"hosts {dead} missed heartbeats"
+            )
+        alive = [h for h in self.hosts.values() if h.alive]
+        if len(alive) >= 2:
+            max_step = max(h.step for h in alive)
+            lag = [h.host_id for h in alive if max_step - h.step > self.straggler_lag_steps]
+            if lag:
+                # Straggler mitigation = evict + rescale (chunk boundaries shift
+                # away from the slow host; its chunk is Thm.-2-cheap to move).
+                k_old = self.k
+                for hid in lag:
+                    self.hosts[hid].alive = False
+                return self._emit(
+                    "straggler", k_old, self.k, tuple(lag), f"hosts {lag} lag >{self.straggler_lag_steps} steps"
+                )
+        return None
+
+    def _emit(self, kind, k_old, k_new, lost, reason) -> ScaleEvent:
+        if k_new == k_old or k_new == 0:
+            frac = 0.0
+        else:
+            frac = cep.migrated_edges_exact(self.state_elements, k_old, k_new) / self.state_elements
+        ev = ScaleEvent(kind, k_old, k_new, lost, frac, reason)
+        self.events.append(ev)
+        return ev

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def segment_distinct_counts_ref(ids_sorted: np.ndarray, pad_id: int) -> np.ndarray:
+    """Distinct non-pad values per row (rows need not even be sorted here)."""
+    out = np.zeros(ids_sorted.shape[0], dtype=np.int32)
+    for i, row in enumerate(np.asarray(ids_sorted)):
+        out[i] = np.unique(row[row != pad_id]).shape[0]
+    return out
+
+
+def spmv_blocked_ref(src_local, dst_local, weights, x_windows):
+    """y_win[c, v] = Σ_e [dst_local[c,e]==v] · w[c,e] · x_windows[c, src_local[c,e]]."""
+    c, w_e = src_local.shape
+    w_v = x_windows.shape[1]
+    out = np.zeros((c, w_v), dtype=np.float32)
+    src = np.asarray(src_local)
+    dst = np.asarray(dst_local)
+    w = np.asarray(weights)
+    x = np.asarray(x_windows)
+    for ci in range(c):
+        for e in range(w_e):
+            s, d = src[ci, e], dst[ci, e]
+            if s < w_v and d < w_v:
+                out[ci, d] += w[ci, e] * x[ci, s]
+    return out
+
+
+def attention_ref(q, k, v, *, scale=None, causal=True, window=None, softcap=None):
+    """Dense reference attention, (B, H, S, D) f32 math."""
+    b, h, s, d = q.shape
+    scale = (d**-0.5) if scale is None else scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, cache_len, *, scale=None, softcap=None):
+    """q (BH, Gq, D), k/v (BH, S, D), cache_len (BH,) → (BH, Gq, D)."""
+    bh, gq, d = q.shape
+    s = k.shape[1]
+    scale = (d**-0.5) if scale is None else scale
+    logits = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = jnp.arange(s)[None, None, :] < cache_len[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bgs,bsd->bgd", p, v.astype(jnp.float32))

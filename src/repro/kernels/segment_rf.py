@@ -1,0 +1,52 @@
+"""Pallas kernel: per-chunk distinct-vertex counting (replication factor).
+
+TPU adaptation of the paper's RF evaluation: the CPU code would walk each
+chunk with a hash set; on TPU we (i) sort each chunk's endpoint ids (XLA sort,
+done by the caller/ops.py), (ii) run this kernel, which counts boundaries
+``ids[i] != ids[i-1]`` per VMEM-resident row block — a pure vector op on the
+VPU, 8×128-lane friendly.
+
+Layout: ids is (num_chunks, width) int32, each row sorted ascending with
+padding = PAD_ID (int32 max) at the tail. Output is (num_chunks, 1) int32
+distinct counts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAD_ID = jnp.iinfo(jnp.int32).max
+
+# Rows per grid step — one VMEM block is (BLOCK_ROWS, width) int32.
+BLOCK_ROWS = 8
+
+
+def _segment_rf_kernel(ids_ref, out_ref):
+    ids = ids_ref[...]  # (BLOCK_ROWS, W) int32, each row sorted
+    prev = jnp.concatenate([jnp.full((ids.shape[0], 1), -1, ids.dtype), ids[:, :-1]], axis=1)
+    is_new = (ids != prev) & (ids != PAD_ID)
+    out_ref[...] = jnp.sum(is_new.astype(jnp.int32), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segment_distinct_counts(ids_sorted: jax.Array, interpret: bool = True) -> jax.Array:
+    """ids_sorted: (C, W) int32 rows sorted ascending, PAD_ID padded → (C,) counts."""
+    c, w = ids_sorted.shape
+    c_pad = (-c) % BLOCK_ROWS
+    if c_pad:
+        ids_sorted = jnp.concatenate(
+            [ids_sorted, jnp.full((c_pad, w), PAD_ID, jnp.int32)], axis=0
+        )
+    grid = (ids_sorted.shape[0] // BLOCK_ROWS,)
+    out = pl.pallas_call(
+        _segment_rf_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ids_sorted.shape[0], 1), jnp.int32),
+        interpret=interpret,
+    )(ids_sorted)
+    return out[:c, 0]

@@ -1,0 +1,1 @@
+from . import mesh, sharding  # noqa: F401

@@ -1,0 +1,52 @@
+"""Serving launcher: batched prefill + decode loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs
+from ..models import model as M
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b", choices=configs.ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch) if args.full else configs.get_smoke(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.zeros((args.batch, cfg.num_patches, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.zeros((args.batch, cfg.encoder_seq, cfg.d_model))
+    cache = M.init_cache(cfg, args.batch, args.prompt_len + args.tokens)
+    prefill = jax.jit(lambda p, b, c: M.forward_prefill(p, cfg, b, c))
+    decode = jax.jit(lambda p, t, c: M.forward_decode(p, cfg, t, c))
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    print(f"prefill {args.batch}x{args.prompt_len}: {(time.time()-t0)*1e3:.1f}ms")
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for _ in range(args.tokens - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    total = args.batch * (args.tokens - 1)
+    print(f"decode: {total} tokens in {time.time()-t0:.2f}s → {total/(time.time()-t0):,.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

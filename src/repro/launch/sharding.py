@@ -1,0 +1,162 @@
+"""Sharding rules: logical-axis assignment with divisibility fallback.
+
+Every rule is a *preference list*; a dimension is sharded on the first mesh
+axis (or axis tuple) that divides it, otherwise replicated — so e.g. gemma3's
+4 KV heads fall back to replicated on a 16-way model axis while its 10240-wide
+FFN shards cleanly. This is what makes one rule set serve all 10 archs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axes, str):
+        return sizes[axes]
+    return int(np.prod([sizes[a] for a in axes]))
+
+
+def _shard_if_divisible(mesh: Mesh, dim: int, axes) -> Optional[object]:
+    if axes is None:
+        return None
+    if dim % _axes_size(mesh, axes) == 0:
+        return axes
+    return None
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def param_spec(mesh: Mesh, path: tuple, shape: tuple) -> P:
+    """PartitionSpec for a parameter leaf, keyed on its pytree path names."""
+    names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+    leaf = names[-1]
+    in_layers = "layers" in names or "encoder" in names
+    m = "model"
+
+    def spec(*dims):
+        return P(*dims)
+
+    if leaf == "embed":  # (V, D) — shard vocab
+        return spec(_shard_if_divisible(mesh, shape[0], m), None)
+    if leaf == "lm_head":  # (D, V)
+        return spec(None, _shard_if_divisible(mesh, shape[1], m))
+    if leaf in ("final_norm", "enc_final_norm"):
+        return spec(None)
+    L = 1 if in_layers else 0  # layer-stacked leaves carry a leading L dim
+
+    def stacked(*dims):
+        return P(*(([None] * L) + list(dims)))
+
+    if leaf in ("wq", "wk", "wv"):  # (L, D, H, hd) — shard the head axis only
+        return stacked(None, _shard_if_divisible(mesh, shape[-2], m), None)
+    if leaf == "wo":  # (L, H, hd, D)
+        return stacked(_shard_if_divisible(mesh, shape[-3], m), None, None)
+    if leaf in ("bq", "bk", "bv"):  # (L, H, hd)
+        return stacked(_shard_if_divisible(mesh, shape[-2], m), None)
+    if leaf in ("q_norm", "k_norm", "ln1", "ln2", "ln_cross", "fuse_attn", "fuse_ssm", "out_norm"):
+        return stacked(None)
+    if leaf == "router":  # (L, D, E) — replicated (tiny, avoids gather)
+        return stacked(None, None)
+    if leaf in ("w1", "w3"):
+        if len(shape) == 2 + L:  # dense MLP (L, D, F)
+            return stacked(None, _shard_if_divisible(mesh, shape[-1], m))
+        # MoE (L, E, D, F): expert-parallel over the model axis
+        return stacked(_shard_if_divisible(mesh, shape[-3], m), None, None)
+    if leaf == "w2":
+        if len(shape) == 2 + L:  # (L, F, D)
+            return stacked(_shard_if_divisible(mesh, shape[-2], m), None)
+        return stacked(_shard_if_divisible(mesh, shape[-3], m), None, None)
+    if leaf == "in_proj":  # SSD: replicated on model (split offsets are static)
+        return stacked(None, None)
+    if leaf in ("conv_w", "a_log", "dt_bias", "d_skip"):
+        return stacked(*([None] * (len(shape) - L)))
+    if leaf == "out_proj":  # (L, di, D)
+        return stacked(None, None)
+    return P(*([None] * len(shape)))
+
+
+def params_shardings(mesh: Mesh, params) -> object:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(mesh, path, leaf.shape)), params
+    )
+
+
+def opt_state_spec(mesh: Mesh, path: tuple, shape: tuple) -> P:
+    """ZeRO-1: optimizer moments shard like the param but additionally over the
+    data axis on the first already-unsharded dimension that divides."""
+    base = param_spec(mesh, path, shape)
+    dims = list(base)
+    dims += [None] * (len(shape) - len(dims))
+    dp = batch_axes(mesh)
+    for i, d in enumerate(dims):
+        if d is None and shape[i] % _axes_size(mesh, dp) == 0:
+            dims[i] = dp if len(dp) > 1 else dp[0]
+            break
+    return P(*dims)
+
+
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    ba = batch_axes(mesh)
+    ax = _shard_if_divisible(mesh, batch_size, ba)
+    if ax is None and len(ba) > 1:  # try the inner data axis alone
+        ax = _shard_if_divisible(mesh, batch_size, ba[-1])
+    return P(ax)
+
+
+def batch_shardings(mesh: Mesh, batch_shapes: dict) -> dict:
+    out = {}
+    for k, sds in batch_shapes.items():
+        bs = sds.shape[0]
+        bsp = batch_spec(mesh, bs)
+        out[k] = NamedSharding(mesh, P(*(list(bsp) + [None] * (len(sds.shape) - 1))))
+    return out
+
+
+def cache_spec(mesh: Mesh, key: str, shape: tuple, *, seq_shard: bool) -> P:
+    """KV-cache shardings: (L, B, Hkv, S, hd). Batch over data axes when it
+    divides; sequence over the model axis for SP decode; SSM state over batch."""
+    ba = batch_axes(mesh)
+    if key == "pos":
+        return P()
+    if key in ("k", "v", "cross_k", "cross_v"):
+        l, b, hkv, s, hd = shape
+        bax = _shard_if_divisible(mesh, b, ba)
+        seq_axes = None
+        if seq_shard:
+            if bax is None:
+                # batch unshardable (long_500k): put the sequence over everything
+                cand = tuple(list(ba) + ["model"])
+                seq_axes = _shard_if_divisible(mesh, s, cand) or _shard_if_divisible(mesh, s, "model")
+            else:
+                seq_axes = _shard_if_divisible(mesh, s, "model")
+        return P(None, bax, None, seq_axes, None)
+    if key in ("ssm_state", "conv_state"):
+        b = shape[1]
+        return P(None, _shard_if_divisible(mesh, b, ba), *([None] * (len(shape) - 2)))
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(mesh: Mesh, cache, *, seq_shard: bool):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh,
+            cache_spec(mesh, str(getattr(path[-1], "key", path[-1])), leaf.shape, seq_shard=seq_shard),
+        ),
+        cache,
+    )
+
+
+def cache_seq_axes(mesh: Mesh, batch_size: int) -> tuple:
+    """Axes used for the cache sequence dim in SP decode (must mirror cache_spec)."""
+    ba = batch_axes(mesh)
+    if batch_size % _axes_size(mesh, ba) == 0:
+        return ("model",)
+    return tuple(list(ba) + ["model"])

@@ -1,0 +1,138 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) cell — the dry-run's
+inputs. Nothing here allocates device memory; shardings are attached to the
+structs so .lower() sees the full distribution plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models import model as M
+from ..models.config import SHAPES, ModelConfig, ShapeSpec
+from . import sharding as SH
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+# Micro-batch accumulation per arch for the train_4k cell (keeps per-device
+# activations inside v5e HBM; see EXPERIMENTS.md §Dry-run).
+TRAIN_MICROBATCHES = {
+    "phi-3-vision-4.2b": 4,
+    "gemma3-4b": 4,
+    "qwen3-8b": 8,
+    "qwen2-1.5b": 2,
+    "gemma2-9b": 8,
+    "whisper-small": 2,
+    "mamba2-1.3b": 4,
+    "deepseek-moe-16b": 4,
+    "granite-moe-3b-a800m": 4,
+    "hymba-1.5b": 4,
+}
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=sharding)
+
+
+def _with_spec(mesh, shape, dtype, spec):
+    return sds(shape, dtype, NamedSharding(mesh, spec))
+
+
+def param_specs(cfg: ModelConfig, mesh) -> dict:
+    shapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0), dtype=PARAM_DTYPE))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: sds(
+            leaf.shape, leaf.dtype, NamedSharding(mesh, SH.param_spec(mesh, path, leaf.shape))
+        ),
+        shapes,
+    )
+
+
+def opt_state_specs(cfg: ModelConfig, mesh) -> dict:
+    from ..train import optimizer as O
+
+    pshapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0), dtype=PARAM_DTYPE))
+    oshapes = jax.eval_shape(O.init_opt_state, pshapes)
+
+    def leaf_spec(path, leaf):
+        # path[0] is "m"/"v"/"step"
+        if str(getattr(path[0], "key", "")) == "step":
+            return sds(leaf.shape, leaf.dtype, NamedSharding(mesh, P()))
+        sub = path[1:]
+        return sds(
+            leaf.shape, leaf.dtype, NamedSharding(mesh, SH.opt_state_spec(mesh, sub, leaf.shape))
+        )
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, oshapes)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, *, seq_len=None) -> dict:
+    b = shape.global_batch
+    s = seq_len if seq_len is not None else shape.seq_len
+    bsp = SH.batch_spec(mesh, b)
+    bax = list(bsp)[0] if len(list(bsp)) else None
+    out = {
+        "tokens": _with_spec(mesh, (b, s), jnp.int32, P(bax, None)),
+        "targets": _with_spec(mesh, (b, s), jnp.int32, P(bax, None)),
+    }
+    if cfg.family == "vlm":
+        out["patch_embeds"] = _with_spec(
+            mesh, (b, cfg.num_patches, cfg.d_model), PARAM_DTYPE, P(bax, None, None)
+        )
+    if cfg.family == "encdec":
+        out["frames"] = _with_spec(
+            mesh, (b, cfg.encoder_seq, cfg.d_model), PARAM_DTYPE, P(bax, None, None)
+        )
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, *, seq_shard: bool) -> dict:
+    cshapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len, dtype=CACHE_DTYPE)
+    )
+
+    def leaf_spec(path, leaf):
+        key = str(getattr(path[-1], "key", path[-1]))
+        return sds(
+            leaf.shape,
+            leaf.dtype,
+            NamedSharding(mesh, SH.cache_spec(mesh, key, leaf.shape, seq_shard=seq_shard)),
+        )
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cshapes)
+
+
+def token_specs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> jax.ShapeDtypeStruct:
+    b = shape.global_batch
+    bsp = SH.batch_spec(mesh, b)
+    bax = list(bsp)[0] if len(list(bsp)) else None
+    return _with_spec(mesh, (b, 1), jnp.int32, P(bax, None))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    """All ShapeDtypeStruct inputs for the cell's step function."""
+    if shape.kind == "train":
+        return {
+            "params": param_specs(cfg, mesh),
+            "opt_state": opt_state_specs(cfg, mesh),
+            "batch": batch_specs(cfg, shape, mesh),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": param_specs(cfg, mesh),
+            "batch": batch_specs(cfg, shape, mesh),
+            "cache": cache_specs(cfg, shape, mesh, seq_shard=True),
+        }
+    if shape.kind == "decode":
+        return {
+            "params": param_specs(cfg, mesh),
+            "token": token_specs(cfg, shape, mesh),
+            "cache": cache_specs(cfg, shape, mesh, seq_shard=True),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,240 @@
+"""Distribution context: sequence-parallel decode attention + sharded cache
+updates (shard_map building blocks consumed by the model when a mesh is live).
+
+The LSE merge here is the jnp twin of kernels/decode_attention.merge_partials —
+each device computes attention over its local KV shard, then partials are
+all-gathered over the sequence axes and merged. That keeps per-device decode
+memory at O(S/n_shards) instead of all-gathering a multi-GB cache.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+_CTX: Optional["Distribution"] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Distribution:
+    mesh: object
+    batch_axes: tuple = ("data",)  # mesh axes sharding the batch dim ( () ⇒ replicated )
+    seq_axes: tuple = ("model",)  # mesh axes sharding the KV-cache sequence dim
+    sp_decode: bool = True  # sequence-parallel decode attention on/off
+    tp_axis: str = "model"
+
+    @property
+    def batch_spec(self):
+        return tuple(self.batch_axes) if self.batch_axes else None
+
+    @property
+    def seq_spec(self):
+        return tuple(self.seq_axes) if self.seq_axes else None
+
+    @property
+    def tp_size(self) -> int:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return sizes.get(self.tp_axis, 1)
+
+
+# --------------------------------------------------------- activation hints
+# Explicit with_sharding_constraint on key activations. Without these, GSPMD
+# propagation is free to invent shardings (measured: it split head_dim 2-way
+# on qwen2 @ TP16, putting a logits all-reduce inside every attention chunk —
+# EXPERIMENTS.md §Perf iteration 1).
+def _wsc(x, spec):
+    dist = current()
+    if dist is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(dist.mesh, spec)
+    )
+
+
+def hint_bsd(x):
+    """Residual stream (B, S, D): batch-sharded, model-replicated."""
+    dist = current()
+    if dist is None:
+        return x
+    return _wsc(x, P(dist.batch_spec, None, None))
+
+
+def hint_bshd(x):
+    """Projected q/k/v (B, S, H, hd): shard heads on tp axis iff divisible."""
+    dist = current()
+    if dist is None:
+        return x
+    h = x.shape[2]
+    hax = dist.tp_axis if (h % dist.tp_size == 0 and dist.tp_size > 1) else None
+    return _wsc(x, P(dist.batch_spec, None, hax, None))
+
+
+def dp_size() -> int:
+    """Product of the batch-sharding axes (1 without a distribution ctx)."""
+    dist = current()
+    if dist is None or not dist.batch_axes:
+        return 1
+    sizes = dict(zip(dist.mesh.axis_names, dist.mesh.devices.shape))
+    n = 1
+    for a in dist.batch_axes:
+        n *= sizes[a]
+    return n
+
+
+def hint_moe_buf(x, shard_experts: bool):
+    """MoE dispatch buffer (DP, E, C, D): DP-sharded; experts on the tp axis
+    when they divide it (this is where the EP a2a happens)."""
+    dist = current()
+    if dist is None:
+        return x
+    e = x.shape[1]
+    eax = dist.tp_axis if (shard_experts and e % dist.tp_size == 0 and dist.tp_size > 1) else None
+    return _wsc(x, P(dist.batch_spec, eax, None, None))
+
+
+def hint_moe_tokens(x):
+    """(DP, T_loc, D) token table: DP-sharded, model-replicated."""
+    dist = current()
+    if dist is None:
+        return x
+    return _wsc(x, P(dist.batch_spec, None, None))
+
+
+def hint_bhsd(x):
+    """(B, H, S, hd) attention-laid-out tensor: batch-sharded; heads on the
+    tp axis iff divisible."""
+    dist = current()
+    if dist is None:
+        return x
+    h = x.shape[1]
+    hax = dist.tp_axis if (h % dist.tp_size == 0 and dist.tp_size > 1) else None
+    return _wsc(x, P(dist.batch_spec, hax, None, None))
+
+
+def hint_bsf(x):
+    """MLP hidden (B, S, F): shard F on the tp axis iff divisible."""
+    dist = current()
+    if dist is None:
+        return x
+    f = x.shape[-1]
+    fax = dist.tp_axis if (f % dist.tp_size == 0 and dist.tp_size > 1) else None
+    return _wsc(x, P(dist.batch_spec, None, fax))
+
+
+def current() -> Optional[Distribution]:
+    return _CTX
+
+
+@contextlib.contextmanager
+def use_distribution(dist: Optional[Distribution]):
+    global _CTX
+    prev = _CTX
+    _CTX = dist
+    try:
+        yield
+    finally:
+        _CTX = prev
+
+
+# ------------------------------------------------------------------ SP decode
+def sp_decode_attention(dist, q, ck, cv, pos, *, window, softcap, scale, norm_eps=1e-6):
+    """q: (B, Hq, 1, hd); ck/cv: (B, Hkv, S, hd) sharded on S over dist.seq_axes.
+
+    Each device computes masked partial attention over its local S/n slice and
+    partials are merged with a stable logsumexp combine (associative — see
+    tests/test_kernels.py::test_decode_merge_is_associative_across_devices).
+    """
+    b, hq, _, hd = q.shape
+    hkv = ck.shape[1]
+    g = hq // hkv
+    s_total = ck.shape[2]
+    bspec = dist.batch_spec
+    sspec = dist.seq_spec
+    seq_axes = tuple(dist.seq_axes)
+
+    def local(qv, kv, vv):
+        # qv: (B, Hq, 1, hd) local-batch; kv/vv: (B, Hkv, S_loc, hd)
+        s_loc = kv.shape[2]
+        idx = jnp.zeros((), jnp.int32)
+        mult = 1
+        for ax in reversed(seq_axes):
+            idx = idx + lax.axis_index(ax) * mult
+            mult *= lax.axis_size(ax)
+        start = idx * s_loc
+        qg = qv.reshape(qv.shape[0], hkv, g, hd).astype(jnp.float32)
+        kf = kv.astype(jnp.float32)
+        sc = jnp.einsum("bhgd,bhsd->bhgs", qg, kf) * scale
+        if softcap is not None:
+            sc = softcap * jnp.tanh(sc / softcap)
+        kpos = start + jnp.arange(s_loc)[None, None, None, :]
+        qpos = pos  # scalar: the query's absolute position
+        mask = kpos <= qpos
+        if window is not None:
+            mask = mask & jnp.where(window > 0, kpos > qpos - window, True)
+        sc = jnp.where(mask, sc, -1e30)
+        m = jnp.max(sc, axis=-1, keepdims=True)
+        p = jnp.exp(sc - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhgs,bhsd->bhgd", p, vv.astype(jnp.float32))
+        o = o / jnp.maximum(l, 1e-30)
+        # Gather partials over the sequence axes and merge.
+        parts = (o[:, :, :, None], m[..., None], l[..., None])  # add tile axis
+        merged_o, merged_m, merged_l = parts
+        for ax in seq_axes:
+            merged_o = lax.all_gather(merged_o, ax, axis=3, tiled=True)
+            merged_m = lax.all_gather(merged_m, ax, axis=3, tiled=True)
+            merged_l = lax.all_gather(merged_l, ax, axis=3, tiled=True)
+        mm = jnp.max(merged_m, axis=3, keepdims=True)
+        w = merged_l * jnp.exp(merged_m - mm)
+        denom = jnp.sum(w, axis=3, keepdims=True)
+        out = jnp.sum(merged_o * (w / jnp.maximum(denom, 1e-30)), axis=3)
+        return out.reshape(qv.shape[0], hq, 1, hd).astype(q.dtype)
+
+    fn = shard_map(
+        local,
+        mesh=dist.mesh,
+        in_specs=(
+            P(bspec, None, None, None),
+            P(bspec, None, sspec, None),
+            P(bspec, None, sspec, None),
+        ),
+        out_specs=P(bspec, None, None, None),
+        check_vma=False,
+    )
+    return fn(q, ck, cv)
+
+
+def sp_cache_update(dist, cache, new_kv, pos):
+    """Write the new token's K/V at ``pos`` into a sequence-sharded cache:
+    only the shard owning ``pos`` writes; others pass through unchanged."""
+    seq_axes = tuple(dist.seq_axes)
+    bspec = dist.batch_spec
+    sspec = dist.seq_spec
+
+    def local(c, nk):
+        s_loc = c.shape[2]
+        idx = jnp.zeros((), jnp.int32)
+        mult = 1
+        for ax in reversed(seq_axes):
+            idx = idx + lax.axis_index(ax) * mult
+            mult *= lax.axis_size(ax)
+        off = pos - idx * s_loc
+        in_range = (off >= 0) & (off < s_loc)
+        safe = jnp.clip(off, 0, s_loc - 1)
+        upd = lax.dynamic_update_slice(c, nk.astype(c.dtype), (0, 0, safe, 0))
+        return jnp.where(in_range, upd, c)
+
+    fn = shard_map(
+        local,
+        mesh=dist.mesh,
+        in_specs=(P(bspec, None, sspec, None), P(bspec, None, None, None)),
+        out_specs=P(bspec, None, sspec, None),
+        check_vma=False,
+    )
+    return fn(cache, new_kv)

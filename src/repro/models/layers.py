@@ -1,0 +1,432 @@
+"""Neural building blocks (pure JAX) shared by the 10 assigned architectures.
+
+Attention is memory-efficient (double-chunked online softmax) so 32k prefill
+and 500k decode lower without materializing S×S logits; per-layer sliding
+windows / soft caps / qk-norm / QKV bias cover the gemma/qwen/phi variants.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- norms/rope
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, hd); positions: (S,) absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------- chunked attention
+def _mask_scores(s, q_pos, k_pos, *, causal, window, kv_len):
+    """s: (B, H, bq, bk) f32; window: traced scalar (0 ⇒ global)."""
+    qp = q_pos[None, None, :, None]
+    kp = k_pos[None, None, None, :]
+    mask = jnp.ones(s.shape[-2:], dtype=bool)[None, None]
+    if causal:
+        mask = mask & (kp <= qp)
+    if window is not None:
+        win_ok = jnp.where(window > 0, kp > qp - window, True)
+        mask = mask & win_ok
+    if kv_len is not None:
+        mask = mask & (kp < kv_len[:, None, None, None])
+    return jnp.where(mask, s, NEG_INF)
+
+
+def mea_attention(
+    q,  # (B, H, Sq, hd)
+    k,  # (B, Hkv, Sk, hd) — expanded to H inside when Hkv < H (GQA)
+    v,
+    *,
+    causal: bool = True,
+    window=None,  # None | traced scalar (0 ⇒ global, >0 ⇒ sliding)
+    softcap: Optional[float] = None,
+    q_offset: int | jax.Array = 0,
+    kv_len: Optional[jax.Array] = None,  # (B,) valid cache lengths
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_kv: int = 1024,
+):
+    """Memory-efficient attention: lax.scan over q chunks × kv chunks with
+    online softmax; O(Sq·hd + bq·bk) live memory instead of O(Sq·Sk).
+
+    The head dim stays FLAT (no (Hkv, G) reshape): reshapes of a sharded head
+    axis force XLA to all-gather activations when H doesn't tile the model
+    axis (measured: ~787 MiB/layer on qwen2 @ TP16 — EXPERIMENTS.md §Perf).
+    GQA is handled by explicitly broadcasting K/V to H heads.
+    """
+    b, hq, sq, hd = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:  # GQA: expand KV to match query heads (broadcast, no copy
+        g = hq // hkv  # until XLA decides layout)
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    sk = k.shape[2]
+    scale = (hd**-0.5) if scale is None else scale
+    bq = min(block_q, sq)
+    bk = min(block_kv, sk)
+    while sq % bq:
+        bq //= 2
+    while sk % bk:
+        bk //= 2
+    bq, bk = max(bq, 1), max(bk, 1)
+    nq, nk = sq // bq, sk // bk
+
+    q_chunks = q.reshape(b, hq, nq, bq, hd).transpose(2, 0, 1, 3, 4)
+    k_chunks = k.reshape(b, hq, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+    v_chunks = v.reshape(b, hq, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc
+        q_pos = q_offset + qi * bq + jnp.arange(bq)
+        qcf = qc.astype(jnp.float32)
+
+        def kv_step(carry, ki_kc):
+            m, l, acc = carry
+            ki, kc, vc = ki_kc
+            k_pos = ki * bk + jnp.arange(bk)
+            s = jnp.einsum(
+                "bhqd,bhkd->bhqk", qcf, kc.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            ) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            s = _mask_scores(s, q_pos, k_pos, causal=causal, window=window, kv_len=kv_len)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vc.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, bq), jnp.float32)
+        a0 = jnp.zeros((b, hq, bq, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), k_chunks, v_chunks)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    # Remat each q-chunk: backward recomputes the inner online-softmax scan,
+    # so only O(bq·hd) residuals survive per chunk instead of O(bq·bk) logits.
+    q_step = jax.checkpoint(q_step, policy=jax.checkpoint_policies.nothing_saveable)
+    _, out_chunks = lax.scan(q_step, None, (jnp.arange(nq), q_chunks))
+    out = out_chunks.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, hd)
+    return out
+
+
+# -------------------------------------------------------------- attention block
+def attention_block(
+    p: dict,
+    x,  # (B, S, D)
+    cfg,
+    *,
+    window=None,
+    causal: bool = True,
+    q_offset=0,
+    cache: Optional[dict] = None,  # {"k","v": (B,Hkv,Smax,hd), "pos": scalar}
+    kv_len=None,
+    positions=None,
+):
+    """Self-attention with RoPE/GQA/qk-norm/bias/softcap; optional KV cache.
+
+    Projections are head-split 3-D tensors (D, H, hd) so the head axis can be
+    model-sharded (when divisible) without any sharded-dim reshape."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    from . import dist as _dist
+    q = _dist.hint_bshd(jnp.einsum("bsd,dhk->bshk", x, p["wq"]))
+    k = _dist.hint_bshd(jnp.einsum("bsd,dhk->bshk", x, p["wk"]))
+    v = _dist.hint_bshd(jnp.einsum("bsd,dhk->bshk", x, p["wv"]))
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = q.transpose(0, 2, 1, 3)  # (B, Hq, S, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if positions is None:
+        positions = q_offset + jnp.arange(s)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    sp_out = None
+    if cache is not None:
+        from . import dist as dist_ctx  # late import (avoids cycle)
+
+        dst = dist_ctx.current()
+        if dst is not None and dst.sp_decode and s == 1:
+            # Sequence-parallel decode: sharded cache write + LSE-merged attention.
+            ck = dist_ctx.sp_cache_update(dst, cache["k"], k, cache["pos"])
+            cv = dist_ctx.sp_cache_update(dst, cache["v"], v, cache["pos"])
+            new_cache = {"k": ck, "v": cv}
+            sp_out = dist_ctx.sp_decode_attention(
+                dst, q, ck, cv, cache["pos"],
+                window=window, softcap=cfg.attn_softcap, scale=hd**-0.5,
+            )
+        else:
+            ck = lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, cache["pos"], 0)
+            )
+            cv = lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, cache["pos"], 0)
+            )
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+            kv_len = jnp.full((b,), cache["pos"] + s, jnp.int32) if kv_len is None else kv_len
+
+    if sp_out is not None:
+        out = sp_out
+    else:
+        out = mea_attention(
+            q, k, v,
+            causal=causal, window=window, softcap=cfg.attn_softcap,
+            q_offset=q_offset, kv_len=kv_len,
+        )
+    out = out.transpose(0, 2, 1, 3)  # (B, S, Hq, hd)
+    out = _dist.hint_bsd(jnp.einsum("bshk,hkd->bsd", out, p["wo"]))
+    return out, new_cache
+
+
+def cross_attention_block(p, x, enc_kv, cfg):
+    """Decoder cross-attention (whisper): kv from encoder output, no mask."""
+    b, s, d = x.shape
+    from . import dist as _dist
+
+    q = _dist.hint_bshd(jnp.einsum("bsd,dhk->bshk", x, p["wq"])).transpose(0, 2, 1, 3)
+    k, v = enc_kv  # (B, Hkv, Se, hd) precomputed from encoder output
+    out = mea_attention(q, k, v, causal=False, window=None, softcap=None)
+    out = out.transpose(0, 2, 1, 3)
+    return _dist.hint_bsd(jnp.einsum("bshk,hkd->bsd", out, p["wo"]))
+
+
+# --------------------------------------------------------------------- MLPs
+def mlp_block(p, x, act: str = "silu"):
+    from . import dist as _dist
+
+    if act == "gelu":  # non-gated (whisper)
+        h = _dist.hint_bsf(jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"])))
+        return _dist.hint_bsd(jnp.einsum("bsf,fd->bsd", h, p["w2"]))
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    h = _dist.hint_bsf(h * jnp.einsum("bsd,df->bsf", x, p["w3"]))
+    return _dist.hint_bsd(jnp.einsum("bsf,fd->bsd", h, p["w2"]))
+
+
+# ---------------------------------------------------------------------- MoE
+def moe_block(p, x, cfg):
+    """Top-k routed experts with DP-local capacity dispatch + shared experts.
+
+    The token table is grouped as (DP, T_loc, …) so every sort/scatter is
+    *local to a data shard* (independent per-row ops, no cross-shard
+    collectives); the only EP communication is the buffer reshard to/from
+    expert-sharded layout around the expert matmuls (the logical all-to-all).
+    Padded experts (cfg.experts_alloc > num_experts) get −inf router logits.
+    Returns (y, aux_loss).
+    """
+    from . import dist as _dist
+
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    ea = cfg.experts_alloc
+    t = b * s
+    dp = _dist.dp_size()
+    if t % max(dp, 1):
+        dp = 1
+    tl = t // dp
+    cap = int(tl * k / e * cfg.capacity_factor) + 1
+
+    xf = _dist.hint_moe_tokens(x.reshape(dp, tl, d))
+    logits = jnp.einsum(
+        "gtd,de->gte", xf.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    if ea > e:  # padded experts never win top-k
+        logits = jnp.where(jnp.arange(ea)[None, None, :] < e, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = lax.top_k(probs, k)  # (DP, T_loc, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- slot assignment (all scatters below touch only int32 index maps;
+    # every D-sized movement is a batched *gather*, which GSPMD partitions by
+    # the DP batch dim instead of replicating — scatters of (DP,E,C,D) were
+    # measured to replicate the whole buffer per device) ---
+    flat_e = expert_ids.reshape(dp, tl * k)
+    flat_g = gate_vals.reshape(dp, tl * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)  # (DP, TK) sorted expert ids
+    st = order // k  # token index of each sorted entry
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(ea)))(se)
+    pos = jnp.arange(tl * k)[None, :] - jnp.take_along_axis(starts, se, axis=1)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)  # overflow → trash slot
+
+    gidx = jnp.arange(dp)[:, None]
+    # slot → token map (tl = sentinel row of zeros), entry → slot map.
+    inv = jnp.full((dp, ea, cap + 1), tl, jnp.int32).at[gidx, se, pos_c].set(
+        jnp.where(keep, st, tl)
+    )
+    slot_of = jnp.zeros((dp, tl * k), jnp.int32).at[gidx, order].set(pos_c)
+    keep_of = jnp.zeros((dp, tl * k), jnp.bool_).at[gidx, order].set(keep)
+
+    xf_pad = jnp.concatenate([xf, jnp.zeros((dp, 1, d), x.dtype)], axis=1)
+    buf = jax.vmap(lambda xr, ir: xr[ir])(xf_pad, inv)  # (DP, E, C+1, D) gather
+    # EP boundary: reshard to expert-sharded for the matmuls…
+    buf = _dist.hint_moe_buf(buf, shard_experts=True)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w1"]))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p["w3"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    # …and back to DP-local for the combine (the return all-to-all).
+    ye = _dist.hint_moe_buf(ye, shard_experts=False)
+    contrib = jax.vmap(lambda yr, er, pr: yr[er, pr])(ye, flat_e, slot_of)  # (DP, TK, D)
+    w = (flat_g * keep_of.astype(jnp.float32)).astype(jnp.float32)
+    yf = jnp.sum(
+        contrib.reshape(dp, tl, k, d).astype(jnp.float32)
+        * w.reshape(dp, tl, k, 1),
+        axis=2,
+    )
+    y = yf.reshape(b, s, d).astype(x.dtype)
+
+    if cfg.num_shared_experts:
+        y = y + mlp_block(p["shared"], x, cfg.act)
+
+    # Load-balance aux loss (Switch-style): E · Σ_e f_e · P_e.
+    inc = jnp.zeros(ea, jnp.float32).at[flat_e.reshape(-1)].add(1.0) / (t * k)
+    pe = probs.mean((0, 1))
+    aux = e * jnp.sum(inc * pe)
+    return y, aux
+
+
+# ----------------------------------------------------------------- SSD (mamba2)
+def _ssd_chunked(xbar, dA, B_, C_, chunk: int):
+    """Chunked state-space-duality scan (Mamba2 §6 reference, JAX form).
+
+    xbar: (B,S,H,P) inputs pre-multiplied by dt; dA: (B,S,H) log-decay per step;
+    B_, C_: (B,S,N) shared across heads (ngroups=1). Returns y (B,S,H,P) and
+    final state (B,H,P,N).
+    """
+    b, s, h, pdim = xbar.shape
+    n = B_.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    c = s // q
+    # Chunk-major layout so ONE chunk at a time flows through the scan: the
+    # O(q²·H) intra-chunk tensors exist only inside the (rematted) body —
+    # vectorizing them over all chunks cost ~35 GiB/device on mamba2 train.
+    xb = xbar.reshape(b, c, q, h, pdim).transpose(1, 0, 2, 3, 4)  # (c,B,q,H,P)
+    da = dA.reshape(b, c, q, h).transpose(1, 0, 2, 3)  # (c,B,q,H)
+    bb = B_.reshape(b, c, q, n).transpose(1, 0, 2, 3)  # (c,B,q,N)
+    cc = C_.reshape(b, c, q, n).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+
+    def step(st_prev, inp):
+        xbc, dac, bbc, ccc = inp  # one chunk
+        cums = jnp.cumsum(dac.astype(jnp.float32), axis=1)  # (B,q,H)
+        li = cums[:, :, None, :] - cums[:, None, :, :]  # (B,i,j,H)
+        l_mat = jnp.where(tri, jnp.exp(li), 0.0)
+        g = jnp.einsum("bin,bjn->bij", ccc, bbc)  # (B,q,q)
+        m = g[..., None] * l_mat  # (B,i,j,H)
+        y_diag = jnp.einsum("bijh,bjhp->bihp", m.astype(xbc.dtype), xbc)
+        decay = jnp.exp(cums[:, -1:, :] - cums).astype(xbc.dtype)  # (B,q,H)
+        st_c = jnp.einsum("bjn,bjh,bjhp->bhpn", bbc, decay, xbc)
+        y_off = jnp.einsum(
+            "bqn,bhpn,bqh->bqhp", ccc, st_prev, jnp.exp(cums).astype(xbc.dtype)
+        )
+        chunk_decay = jnp.exp(cums[:, -1, :]).astype(xbc.dtype)  # (B,H)
+        st_new = st_prev * chunk_decay[:, :, None, None] + st_c
+        return st_new, (y_diag + y_off)
+
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    st0 = jnp.zeros((b, h, pdim, n), xbar.dtype)
+    final_state, y_chunks = lax.scan(step, st0, (xb, da, bb, cc))
+    y = y_chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, pdim)
+    return y, final_state
+
+
+def ssd_block(p, x, cfg, *, state=None, conv_state=None, chunk: int = 256):
+    """Mamba2 block. Training/prefill: chunked SSD over the sequence.
+    Decode (S == 1 with state): O(1) recurrent update.
+    Returns (y, (new_state, new_conv_state))."""
+    from . import dist as _dist
+
+    b, s, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+    # Pin the SSD activations batch-sharded/model-replicated: without the
+    # hint GSPMD invents a model sharding inside the chunk scan and
+    # all-reduces the O(q²·H) intra-chunk tensors (measured 549 GiB/step on
+    # mamba2 train — EXPERIMENTS.md §Perf it. 7).
+    zxbc = _dist.hint_bsd(jnp.einsum("bsd,dk->bsk", x, p["in_proj"]))  # replicated K: split offsets are unaligned with any K-sharding
+    z, xi, b_, c_, dt = jnp.split(zxbc, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xi, b_, c_], axis=-1)  # (B,S,di+2n)
+
+    w = p["conv_w"]  # (K, di+2n) depthwise causal conv
+    kw = w.shape[0]
+    if state is None:  # train/prefill: causal depthwise conv over seq
+        pad = jnp.zeros((b, kw - 1, conv_in.shape[-1]), conv_in.dtype)
+        ext = jnp.concatenate([pad, conv_in], axis=1)
+        conv = sum(ext[:, i : i + s] * w[i] for i in range(kw))
+        new_conv_state = ext[:, -(kw - 1) :] if kw > 1 else jnp.zeros((b, 0, conv_in.shape[-1]), x.dtype)
+    else:  # decode: rolling window
+        ext = jnp.concatenate([conv_state, conv_in], axis=1)  # (B, kw, C)
+        conv = sum(ext[:, i : i + 1] * w[i] for i in range(kw))
+        new_conv_state = ext[:, 1:]
+    conv = jax.nn.silu(conv)
+    xi, b_, c_ = jnp.split(conv, [di, di + n], axis=-1)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    xh = xi.reshape(b, s, h, pdim)
+    xbar = xh * dt[..., None].astype(xh.dtype)
+    da = dt * a  # (B,S,H)
+
+    if state is None:
+        y, final_state = _ssd_chunked(xbar, da.astype(xh.dtype), b_, c_, chunk)
+    else:
+        # Single-step recurrence: state ← state·exp(dA) + B ⊗ xbar; y = C·state.
+        dec = jnp.exp(da[:, 0]).astype(state.dtype)  # (B,H)
+        outer = jnp.einsum("bhp,bn->bhpn", xbar[:, 0], b_[:, 0]).astype(state.dtype)
+        final_state = state * dec[:, :, None, None] + outer
+        y = jnp.einsum("bn,bhpn->bhp", c_[:, 0], final_state)[:, None].reshape(b, 1, h, pdim)
+
+    y = y.astype(x.dtype) + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = _dist.hint_bsd(y.reshape(b, s, di))
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = _dist.hint_bsd(jnp.einsum("bsk,kd->bsd", y, p["out_proj"]).astype(x.dtype))
+    return out, (final_state, new_conv_state)

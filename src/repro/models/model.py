@@ -1,0 +1,417 @@
+"""Unified causal LM covering all assigned families.
+
+One parameter pytree with layer-stacked leaves (axis 0 = layer) drives a
+``lax.scan`` over layers, so the HLO is O(1) in depth — essential for the
+512-device dry-run compiles. Families:
+
+  dense / vlm / audio-backbone : attention + (Sw)iGLU MLP
+  moe                          : attention + routed experts (+ shared)
+  ssm                          : Mamba2 SSD blocks only
+  hybrid                       : parallel attention+SSD heads (Hymba) + MLP
+  encdec                       : whisper — bidirectional encoder + causal
+                                 decoder with cross-attention
+
+Positional encoding is unified to RoPE (DESIGN.md §8: backbone fidelity is
+dims/heads/layers/routing; whisper's learned abs-pos is replaced by RoPE).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------- param init
+def _norm_init(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    keys = iter(jax.random.split(key, 64))
+    d, l = cfg.d_model, cfg.num_layers
+    hq = cfg.num_heads * cfg.head_dim
+    hkv = cfg.num_kv_heads * cfg.head_dim
+    out_scale = 0.02 / max(1.0, (2 * l) ** 0.5)
+
+    def attn_params(nl):
+        # Head-split 3-D projections: the head axis shards cleanly (or not at
+        # all) — fused (H·hd) dims reshard on every reshape (see layers.py).
+        nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        p = {
+            "wq": _norm_init(next(keys), (nl, d, nh, hd), dtype),
+            "wk": _norm_init(next(keys), (nl, d, nkv, hd), dtype),
+            "wv": _norm_init(next(keys), (nl, d, nkv, hd), dtype),
+            "wo": _norm_init(next(keys), (nl, nh, hd, d), dtype, out_scale),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((nl, nh, hd), dtype)
+            p["bk"] = jnp.zeros((nl, nkv, hd), dtype)
+            p["bv"] = jnp.zeros((nl, nkv, hd), dtype)
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.zeros((nl, cfg.head_dim), dtype)
+            p["k_norm"] = jnp.zeros((nl, cfg.head_dim), dtype)
+        return p
+
+    def mlp_params(nl, width):
+        p = {
+            "w1": _norm_init(next(keys), (nl, d, width), dtype),
+            "w2": _norm_init(next(keys), (nl, width, d), dtype, out_scale),
+        }
+        if cfg.act != "gelu":
+            p["w3"] = _norm_init(next(keys), (nl, d, width), dtype)
+        return p
+
+    def ssm_params(nl):
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        return {
+            "in_proj": _norm_init(next(keys), (nl, d, 2 * di + 2 * n + h), dtype),
+            "conv_w": _norm_init(next(keys), (nl, cfg.ssm_conv, di + 2 * n), dtype, 0.2),
+            "a_log": jnp.zeros((nl, h), jnp.float32),
+            "dt_bias": jnp.zeros((nl, h), jnp.float32),
+            "d_skip": jnp.ones((nl, h), dtype),
+            "out_norm": jnp.zeros((nl, di), dtype),
+            "out_proj": _norm_init(next(keys), (nl, di, d), dtype, out_scale),
+        }
+
+    params: dict = {
+        "embed": _norm_init(next(keys), (cfg.vocab_size, d), dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _norm_init(next(keys), (d, cfg.vocab_size), dtype)
+
+    lay: dict = {"ln1": jnp.zeros((l, d), dtype)}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        lay.update(attn_params(l))
+        lay["ln2"] = jnp.zeros((l, d), dtype)
+        lay.update(mlp_params(l, cfg.d_ff))
+    elif fam == "moe":
+        lay.update(attn_params(l))
+        lay["ln2"] = jnp.zeros((l, d), dtype)
+        e, f = cfg.experts_alloc, cfg.moe_d_ff
+        lay["router"] = _norm_init(next(keys), (l, d, e), jnp.float32)
+        lay["w1"] = _norm_init(next(keys), (l, e, d, f), dtype)
+        lay["w3"] = _norm_init(next(keys), (l, e, d, f), dtype)
+        lay["w2"] = _norm_init(next(keys), (l, e, f, d), dtype, out_scale)
+        if cfg.num_shared_experts:
+            sw = f * cfg.num_shared_experts
+            lay["shared"] = {
+                "w1": _norm_init(next(keys), (l, d, sw), dtype),
+                "w3": _norm_init(next(keys), (l, d, sw), dtype),
+                "w2": _norm_init(next(keys), (l, sw, d), dtype, out_scale),
+            }
+    elif fam == "ssm":
+        lay.update(ssm_params(l))
+    elif fam == "hybrid":
+        lay.update(attn_params(l))
+        ssm = ssm_params(l)
+        lay["ssm"] = ssm
+        lay["fuse_attn"] = jnp.zeros((l, d), dtype)
+        lay["fuse_ssm"] = jnp.zeros((l, d), dtype)
+        lay["ln2"] = jnp.zeros((l, d), dtype)
+        lay.update(mlp_params(l, cfg.d_ff))
+    elif fam == "encdec":
+        lay.update(attn_params(l))
+        lay["ln_cross"] = jnp.zeros((l, d), dtype)
+        lay["cross"] = attn_params(l)
+        lay["ln2"] = jnp.zeros((l, d), dtype)
+        lay.update(mlp_params(l, cfg.d_ff))
+        el = cfg.encoder_layers
+        enc = {"ln1": jnp.zeros((el, d), dtype), "ln2": jnp.zeros((el, d), dtype)}
+        enc.update(attn_params(el))
+        enc.update(mlp_params(el, cfg.d_ff))
+        params["encoder"] = enc
+        params["enc_final_norm"] = jnp.zeros((d,), dtype)
+    else:
+        raise ValueError(fam)
+    params["layers"] = lay
+    return params
+
+
+def _windows_array(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.asarray([w or 0 for w in cfg.layer_windows()], jnp.int32)
+
+
+# ------------------------------------------------------------------ caches
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32) -> dict:
+    l = cfg.num_layers
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe", "hybrid", "encdec"):
+        cache["k"] = jnp.zeros((l, batch, cfg.num_kv_heads, max_len, cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    if fam == "encdec":
+        cache["cross_k"] = jnp.zeros(
+            (l, batch, cfg.num_kv_heads, cfg.encoder_seq, cfg.head_dim), dtype
+        )
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    if fam in ("ssm", "hybrid"):
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        cache["ssm_state"] = jnp.zeros((l, batch, h, cfg.ssm_head_dim, n), dtype)
+        cache["conv_state"] = jnp.zeros((l, batch, cfg.ssm_conv - 1, di + 2 * n), dtype)
+    return cache
+
+
+# -------------------------------------------------------------- layer stacks
+def _block(cfg: ModelConfig, p, x, window, *, q_offset, cache_l, kv_len, enc_out=None):
+    """One decoder block. cache_l: per-layer cache slice dict or None."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    attn_cache = None
+    if cache_l is not None and "k" in cache_l:
+        attn_cache = {"k": cache_l["k"], "v": cache_l["v"], "pos": q_offset}
+    # SSD runs its O(1) recurrence only for single-token decode; any longer
+    # sequence (train or prefill) goes through the chunked scan from state 0.
+    is_decode = x.shape[1] == 1 and cache_l is not None
+
+    def ssm_io():
+        if is_decode:
+            return cache_l.get("ssm_state"), cache_l.get("conv_state")
+        return None, None
+
+    if fam in ("dense", "vlm", "audio", "moe", "encdec"):
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        attn, ac = layers.attention_block(
+            p, h, cfg, window=window, q_offset=q_offset, cache=attn_cache, kv_len=kv_len
+        )
+        x = x + attn
+        if ac is not None:
+            new_cache.update(ac)
+        if fam == "encdec":
+            if enc_out is not None:
+                # Compute this layer's cross K/V from the (loop-invariant)
+                # encoder output — passing precomputed stacked KV through scan
+                # xs costs a full f32 cotangent (+14.5 GiB on whisper train).
+                from . import dist as _dist
+
+                ck = _dist.hint_bhsd(jnp.einsum("bsd,dhk->bhsk", enc_out, p["cross"]["wk"]))
+                cv = _dist.hint_bhsd(jnp.einsum("bsd,dhk->bhsk", enc_out, p["cross"]["wv"]))
+            else:  # decode: from the cache (filled at prefill)
+                ck, cv = cache_l["cross_k"], cache_l["cross_v"]
+            h = layers.rms_norm(x, p["ln_cross"], cfg.norm_eps)
+            x = x + layers.cross_attention_block(p["cross"], h, (ck, cv), cfg)
+            if cache_l is not None:
+                cdt = cache_l["cross_k"].dtype
+                new_cache["cross_k"] = ck.astype(cdt)
+                new_cache["cross_v"] = cv.astype(cdt)
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if fam == "moe":
+            y, aux = layers.moe_block(p, h, cfg)
+        else:
+            y = layers.mlp_block(p, h, cfg.act)
+        x = x + y
+    elif fam == "ssm":
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        st, cv = ssm_io()
+        y, (st2, cv2) = layers.ssd_block(p, h, cfg, state=st, conv_state=cv)
+        x = x + y
+        if cache_l is not None:
+            new_cache["ssm_state"] = st2.astype(cache_l["ssm_state"].dtype)
+            new_cache["conv_state"] = cv2.astype(cache_l["conv_state"].dtype)
+    elif fam == "hybrid":
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        attn, ac = layers.attention_block(
+            p, h, cfg, window=window, q_offset=q_offset, cache=attn_cache, kv_len=kv_len
+        )
+        st, cv = ssm_io()
+        ssm_y, (st2, cv2) = layers.ssd_block(p["ssm"], h, cfg, state=st, conv_state=cv)
+        fused = 0.5 * (
+            layers.rms_norm(attn, p["fuse_attn"], cfg.norm_eps)
+            + layers.rms_norm(ssm_y, p["fuse_ssm"], cfg.norm_eps)
+        )
+        x = x + fused
+        if cache_l is not None:
+            if ac is not None:
+                new_cache.update(ac)
+            new_cache["ssm_state"] = st2.astype(cache_l["ssm_state"].dtype)
+            new_cache["conv_state"] = cv2.astype(cache_l["conv_state"].dtype)
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_block(p, h, cfg.act)
+    else:
+        raise ValueError(fam)
+    return x, aux, new_cache
+
+
+def _run_layers(cfg, stacked, x, *, q_offset=0, caches=None, kv_len=None, enc_out=None, remat=True):
+    windows = _windows_array(cfg)
+    cache_xs = None
+    if caches is not None:
+        cache_xs = {k: v for k, v in caches.items() if k != "pos"}
+
+    # Decode (one token): fori_loop with the stacked cache in the CARRY so
+    # XLA updates it in place. A scan would stream the cache through xs→ys,
+    # triple-buffering multi-GiB KV caches (measured +11 GiB on gemma2
+    # decode_32k — EXPERIMENTS.md §Perf).
+    if caches is not None and x.shape[1] == 1:
+        def fbody(i, carry):
+            x, aux, cache = carry
+            p_l = jax.tree.map(lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False), stacked)
+            cache_l = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False), cache
+            )
+            x, aux_l, new_cache = _block(
+                cfg, p_l, x, windows[i], q_offset=q_offset, cache_l=cache_l,
+                kv_len=kv_len, enc_out=None,
+            )
+            cache = jax.tree.map(
+                lambda buf, new: lax.dynamic_update_index_in_dim(
+                    buf, new.astype(buf.dtype), i, 0
+                ),
+                cache,
+                new_cache,
+            )
+            return (x, aux + aux_l, cache)
+
+        x, aux, new_caches = lax.fori_loop(
+            0, cfg.num_layers, fbody, (x, jnp.zeros((), jnp.float32), cache_xs)
+        )
+        return x, aux, new_caches
+
+    def body(carry, xs):
+        x, aux = carry
+        p_l, w_l, cache_l = xs
+        x, aux_l, new_cache = _block(
+            cfg, p_l, x, w_l, q_offset=q_offset, cache_l=cache_l,
+            kv_len=kv_len, enc_out=enc_out,
+        )
+        return (x, aux + aux_l), new_cache
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), new_caches = lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stacked, windows, cache_xs)
+    )
+    return x, aux, new_caches
+
+
+# ------------------------------------------------------------------- embed/loss
+def _embed(cfg, params, tokens, batch_extras):
+    x = params["embed"][tokens]
+    if cfg.family == "vlm" and batch_extras.get("patch_embeds") is not None:
+        pe = batch_extras["patch_embeds"].astype(x.dtype)
+        npatch = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, npatch:]], axis=1)
+    return x
+
+
+def _encode(cfg, params, frames):
+    """Whisper encoder over stub frame embeddings (B, Se, D)."""
+    x = frames
+    enc = params["encoder"]
+    windows = jnp.zeros((cfg.encoder_layers,), jnp.int32)
+
+    def body(x, xs):
+        p_l, w_l = xs
+        h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        attn, _ = layers.attention_block(p_l, h, cfg, window=w_l, causal=False)
+        x = x + attn
+        h = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_block(p_l, h, cfg.act)
+        return x, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, (enc, windows))
+    return layers.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def chunked_ce_loss(x, embed, targets, mask=None, *, chunk: int = 512, softcap=None, lm_head=None):
+    """Cross-entropy with sequence-chunked logits (never materializes
+    (B, S, V) f32). x: (B,S,D); embed: (V,D) (tied) or lm_head (D,V)."""
+    b, s, d = x.shape
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    nc = s // c
+    w = embed.T if lm_head is None else lm_head  # (D, V)
+
+    def step(acc, idx):
+        xc = lax.dynamic_slice(x, (0, idx * c, 0), (b, c, d))
+        tc = lax.dynamic_slice(targets, (0, idx * c), (b, c))
+        logits = jnp.einsum("bcd,dv->bcv", xc.astype(jnp.float32), w.astype(jnp.float32))
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if mask is not None:
+            mc = lax.dynamic_slice(mask, (0, idx * c), (b, c))
+            nll = nll * mc
+            return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+        return (acc[0] + nll.sum(), acc[1] + b * c), None
+
+    # Remat: recompute the (b, c, V) f32 logits chunk in backward instead of
+    # saving every chunk (unsharded-vocab archs would otherwise hold ~13 GiB
+    # of logits residuals per device — see EXPERIMENTS.md §Dry-run).
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = lax.scan(step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), jnp.arange(nc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ----------------------------------------------------------------- public API
+def forward_train(params, cfg: ModelConfig, batch: dict, *, remat: bool = True):
+    """batch: tokens (B,S) int32, targets (B,S) int32, optional patch_embeds /
+    frames. Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens, batch)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, batch["frames"])
+    x, aux, _ = _run_layers(cfg, params["layers"], x, enc_out=enc_out, remat=remat)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    loss = chunked_ce_loss(
+        x, params["embed"], batch["targets"],
+        softcap=cfg.final_softcap, lm_head=params.get("lm_head"),
+    )
+    total = loss + 0.01 * aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+def forward_prefill(params, cfg: ModelConfig, batch: dict, cache: dict):
+    """Run the prompt through the model, filling the cache. Returns
+    (last-position logits (B, V), new cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed(cfg, params, tokens, batch)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, batch["frames"])
+    x, _, new_caches = _run_layers(
+        cfg, params["layers"], x, q_offset=0, caches=cache, enc_out=enc_out, remat=False
+    )
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _final_logits(params, cfg, x[:, -1:])
+    out_cache = dict(new_caches)
+    out_cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits[:, 0], out_cache
+
+
+def forward_decode(params, cfg: ModelConfig, token, cache: dict, batch_extras: Optional[dict] = None):
+    """One decode step. token: (B, 1) int32. Returns (logits (B,V), cache)."""
+    batch_extras = batch_extras or {}
+    x = params["embed"][token]
+    # encdec: cross K/V comes from the cache (filled at prefill) — the
+    # encoder is NOT re-run per decode step.
+    x, _, new_caches = _run_layers(
+        cfg, params["layers"], x, q_offset=cache["pos"], caches=cache, remat=False
+    )
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _final_logits(params, cfg, x)
+    out_cache = dict(new_caches)
+    out_cache["pos"] = cache["pos"] + 1
+    return logits[:, 0], out_cache
+
+
+def _final_logits(params, cfg, x):
+    w = params.get("lm_head")
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32), (params["embed"].T if w is None else w).astype(jnp.float32))
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits

@@ -1,0 +1,1 @@
+from . import compression, optimizer, steps  # noqa: F401

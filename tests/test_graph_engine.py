@@ -1,0 +1,85 @@
+"""Graph engine validation vs networkx (single device; multi-device variant
+lives in test_multidevice-style subprocess below)."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import baselines, ordering
+from repro.core.graph import Graph, rmat_graph
+from repro.graphs import engine as E
+from repro.launch import mesh as MM
+
+
+@pytest.fixture(scope="module")
+def small():
+    g = rmat_graph(6, 4, seed=5)
+    nxg = nx.Graph()
+    nxg.add_nodes_from(range(g.num_vertices))
+    nxg.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+    return g, nxg
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return MM.make_test_mesh(data=1, model=1)
+
+
+def _data(g, k=4):
+    order = ordering.geo_order(g, seed=0)
+    return E.cep_engine_data(g, order, k)
+
+
+def test_pagerank_matches_networkx(small, mesh1):
+    g, nxg = small
+    data = _data(g)
+    pr = np.asarray(E.pagerank(data, mesh1, iterations=50))
+    want = nx.pagerank(nxg, alpha=0.85, max_iter=100, tol=1e-10)
+    want_v = np.array([want[i] for i in range(g.num_vertices)])
+    np.testing.assert_allclose(pr, want_v, rtol=5e-3, atol=1e-5)
+
+
+def test_sssp_matches_networkx(small, mesh1):
+    g, nxg = small
+    data = _data(g)
+    dist, iters = E.sssp(data, mesh1, source=0)
+    lengths = nx.single_source_shortest_path_length(nxg, 0)
+    got = np.asarray(dist)
+    for v in range(g.num_vertices):
+        if v in lengths:
+            assert got[v] == pytest.approx(lengths[v]), v
+        else:
+            assert got[v] > 1e8
+    assert iters > 0
+
+
+def test_wcc_matches_networkx(small, mesh1):
+    g, nxg = small
+    data = _data(g)
+    lab, _ = E.wcc(data, mesh1)
+    lab = np.asarray(lab).astype(np.int64)
+    comps = list(nx.connected_components(nxg))
+    for comp in comps:
+        ls = {lab[v] for v in comp}
+        assert len(ls) == 1, "component must share one label"
+    # Distinct components get distinct labels.
+    reps = [lab[next(iter(c))] for c in comps]
+    assert len(set(reps)) == len(comps)
+
+
+def test_geo_partition_has_fewer_mirrors_than_hash(small, mesh1):
+    g, _ = small
+    k = 8
+    geo = _data(g, k)
+    hsh = E.build_engine_data(g, baselines.hash_1d(g, k), k)
+    assert geo.mirrors < hsh.mirrors
+    assert E.comm_volume_per_iteration(geo) < E.comm_volume_per_iteration(hsh)
+
+
+def test_pagerank_invariant_to_partitioning(small, mesh1):
+    """Results must not depend on how edges are partitioned (engine soundness)."""
+    g, _ = small
+    d1 = _data(g, 2)
+    d2 = E.build_engine_data(g, baselines.hash_1d(g, 7), 7)
+    p1 = np.asarray(E.pagerank(d1, mesh1, iterations=30))
+    p2 = np.asarray(E.pagerank(d2, mesh1, iterations=30))
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-8)

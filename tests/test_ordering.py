@@ -1,0 +1,122 @@
+"""GEO ordering tests (paper §4, Thm. 6) + Alg.3/Alg.4 cross-checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cep, metrics, ordering, theory
+from repro.core.graph import Graph, grid_graph, powerlaw_graph, ring_graph, rmat_graph
+
+
+def _rf_of_order(g, order, k):
+    s, d = g.src[order], g.dst[order]
+    return metrics.replication_factor_ordered(s, d, k, g.num_vertices)
+
+
+def test_order_is_permutation():
+    g = rmat_graph(8, 8, seed=1)
+    order = ordering.geo_order(g, seed=1)
+    assert order.shape[0] == g.num_edges
+    assert np.array_equal(np.sort(order), np.arange(g.num_edges))
+
+
+@pytest.mark.parametrize("gen,args", [
+    (rmat_graph, (8, 8)),
+    (powerlaw_graph, (2000, 2.3)),
+    (grid_graph, (40,)),
+])
+def test_geo_beats_random_ordering(gen, args):
+    g = gen(*args, seed=3) if gen is not grid_graph else gen(*args)
+    geo = ordering.geo_order(g, seed=0)
+    rnd = ordering.random_edge_order(g, seed=0)
+    for k in (4, 16, 64):
+        rf_geo = _rf_of_order(g, geo, k)
+        rf_rnd = _rf_of_order(g, rnd, k)
+        assert rf_geo < rf_rnd, (k, rf_geo, rf_rnd)
+
+
+def test_theorem6_upper_bound():
+    # RF_k ≤ (|V| + |E| + k)/|V| for GEO+CEP.
+    for seed in range(3):
+        g = rmat_graph(7, 8, seed=seed)
+        order = ordering.geo_order(g, seed=seed)
+        for k in (4, 8, 32, 128):
+            rf = _rf_of_order(g, order, k)
+            assert rf <= theory.bound_general(g.num_vertices, g.num_edges, k) + 1e-9
+
+
+def test_geo_close_to_baseline_algorithm3():
+    """Alg. 4 (PQ) should reach quality comparable to Alg. 3 (direct objective)."""
+    g = rmat_graph(5, 4, seed=7)  # tiny: Alg. 3 is O(|V|^2 |E| ...)
+    fast = ordering.geo_order(g, k_min=2, k_max=8, seed=0)
+    slow = ordering.geo_order_baseline(g, k_min=2, k_max=8, seed=0)
+    assert np.array_equal(np.sort(slow), np.arange(g.num_edges))
+    for k in (2, 4, 8):
+        rf_fast = _rf_of_order(g, fast, k)
+        rf_slow = _rf_of_order(g, slow, k)
+        assert rf_fast <= rf_slow * 1.25 + 1e-9, (k, rf_fast, rf_slow)
+
+
+def test_objective_equals_sum_of_rf():
+    """Lemma 1: Eq.(6)/(7) over a complete ordering == Σ_k RF_k·|V| / |V|."""
+    g = rmat_graph(5, 4, seed=2)
+    order = ordering.random_edge_order(g, seed=1)
+    s, d = g.src[order], g.dst[order]
+    kmin, kmax = 2, 6
+    obj = ordering.ordering_objective(s, d, g.num_edges, g.num_vertices, kmin, kmax)
+    direct = sum(
+        metrics.replication_factor_ordered(s, d, k, g.num_vertices) for k in range(kmin, kmax + 1)
+    )
+    assert obj == pytest.approx(direct, rel=1e-12)
+
+
+def test_ring_graph_geo_is_near_optimal():
+    # On a ring, contiguous edge chunks are optimal: RF_k ≈ (|V| + k)/|V|.
+    g = ring_graph(512)
+    order = ordering.geo_order(g, seed=0)
+    for k in (4, 16):
+        rf = _rf_of_order(g, order, k)
+        optimal = (g.num_vertices + k) / g.num_vertices
+        assert rf <= optimal * 1.02, (k, rf, optimal)
+
+
+@given(scale=st.integers(4, 7), ef=st.integers(2, 8), seed=st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_geo_order_property_valid_and_bounded(scale, ef, seed):
+    g = rmat_graph(scale, ef, seed=seed)
+    order = ordering.geo_order(g, seed=seed)
+    assert np.array_equal(np.sort(order), np.arange(g.num_edges))
+    rf = _rf_of_order(g, order, 8)
+    assert 1.0 <= rf <= theory.bound_general(g.num_vertices, g.num_edges, 8)
+
+
+def test_delta_zero_vs_default():
+    """δ controls two-hop pull-in (Fig. 5): default δ should beat δ=1 quality."""
+    g = rmat_graph(8, 8, seed=4)
+    d_default = ordering.geo_order(g, seed=0)
+    d_one = ordering.geo_order(g, delta=1, seed=0)
+    rf_default = np.mean([_rf_of_order(g, d_default, k) for k in (4, 16, 64)])
+    rf_one = np.mean([_rf_of_order(g, d_one, k) for k in (4, 16, 64)])
+    assert rf_default <= rf_one * 1.05
+
+
+def test_parallel_geo_quality_and_validity():
+    """Beyond-paper: block-parallel GEO (the paper's §7 future work)."""
+    g = rmat_graph(9, 8, seed=11)
+    seq = ordering.geo_order(g, seed=0)
+    for balance in (False, True):
+        par, counts = ordering.parallel_geo_order(g, workers=4, seed=0, balance_edges=balance)
+        assert np.array_equal(np.sort(par), np.arange(g.num_edges))
+        assert sum(counts) == g.num_edges
+        for k in (4, 16):
+            rf_p = _rf_of_order(g, par, k)
+            rf_s = _rf_of_order(g, seq, k)
+            rf_r = _rf_of_order(g, ordering.random_edge_order(g, 0), k)
+            # Quality-first mode stays near sequential; balanced mode must
+            # still clearly beat random ordering.
+            bound = 1.35 if not balance else 2.5
+            assert rf_p <= rf_s * bound, (balance, k, rf_p, rf_s)
+            assert rf_p < rf_r, (balance, k)
+    # Edge-balanced mode: near-equal region loads.
+    _, counts = ordering.parallel_geo_order(g, workers=4, seed=0, balance_edges=True)
+    assert max(counts) <= 1.3 * (sum(counts) / len(counts))

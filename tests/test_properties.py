@@ -1,0 +1,154 @@
+"""Hypothesis property tests on system invariants + reference equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cep, metrics, ordering
+from repro.core.graph import rmat_graph
+from repro.models import config as MC
+from repro.models import layers as L
+from repro.models import model as M
+
+
+# ------------------------------------------------------------------ orderings
+@given(scale=st.integers(4, 7), seed=st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_vertex_order_lift_is_permutation(scale, seed):
+    g = rmat_graph(scale, 4, seed=seed)
+    rank = np.random.default_rng(seed).permutation(g.num_vertices)
+    lifted = ordering.lift_vertex_order(g, rank)
+    assert np.array_equal(np.sort(lifted), np.arange(g.num_edges))
+
+
+@given(scale=st.integers(4, 6), k=st.integers(2, 16), seed=st.integers(0, 3))
+@settings(max_examples=15, deadline=None)
+def test_rf_bounds_for_any_partition(scale, k, seed):
+    g = rmat_graph(scale, 4, seed=seed)
+    part = np.random.default_rng(seed).integers(0, k, g.num_edges).astype(np.int32)
+    rf = metrics.replication_factor(g.src, g.dst, part, k, g.num_vertices)
+    # 1·(touched/|V|) ≤ RF ≤ min(k, avg_degree)·…: use loose-but-true bounds.
+    touched = np.unique(np.concatenate([g.src, g.dst])).shape[0]
+    assert touched / g.num_vertices <= rf + 1e-9
+    assert rf <= 2 * g.num_edges / g.num_vertices + 1e-9  # Σ|V(E_p)| ≤ 2|E|
+
+
+@given(e=st.integers(10, 10**6), ks=st.tuples(st.integers(1, 64), st.integers(1, 64)))
+@settings(max_examples=60, deadline=None)
+def test_rescale_is_involution_and_bounded(e, ks):
+    k1, k2 = ks
+    moved_there = cep.migrated_edges_exact(e, k1, k2)
+    moved_back = cep.migrated_edges_exact(e, k2, k1)
+    assert moved_there == moved_back
+    assert 0 <= moved_there <= e
+    if k1 == k2:
+        assert moved_there == 0
+
+
+# ------------------------------------------------------------------ layers
+def test_rope_identity_at_position_zero():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 1, 16))
+    out = L.rope(x, jnp.zeros((1,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)
+
+
+def test_rope_is_norm_preserving():
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 8, 32))
+    out = L.rope(x, jnp.arange(8))
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(out), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("s,bq,bk", [(32, 8, 8), (64, 16, 32), (48, 512, 1024)])
+def test_mea_attention_matches_dense_reference(s, bq, bk):
+    from repro.kernels import ref
+
+    b, h, hd = 2, 3, 16
+    key = jax.random.PRNGKey(s)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, s, hd))
+    k = jax.random.normal(kk, (b, h, s, hd))
+    v = jax.random.normal(kv, (b, h, s, hd))
+    got = L.mea_attention(q, k, v, causal=True, block_q=bq, block_kv=bk)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_ce_matches_direct():
+    b, s, d, v = 2, 16, 8, 50
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (b, s, d))
+    emb = jax.random.normal(jax.random.PRNGKey(4), (v, d))
+    tgt = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, v)
+    got = M.chunked_ce_loss(x, emb, tgt, chunk=4)
+    logits = x @ emb.T
+    want = -jnp.mean(
+        jnp.take_along_axis(jax.nn.log_softmax(logits, -1), tgt[..., None], -1)
+    )
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+# ------------------------------------------------------------------ MoE
+def _ref_moe(p, x, cfg):
+    """Naive per-expert loop reference (no capacity drops)."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf @ np.asarray(p["router"], np.float32)
+    logits[:, cfg.num_experts:] = -1e30
+    probs = jax.nn.softmax(jnp.asarray(logits), -1)
+    gv, ei = jax.lax.top_k(probs, cfg.experts_per_token)
+    gv = gv / gv.sum(-1, keepdims=True)
+    out = np.zeros_like(np.asarray(xf, np.float32))
+    for t in range(xf.shape[0]):
+        for j in range(cfg.experts_per_token):
+            e = int(ei[t, j])
+            h = jax.nn.silu(xf[t] @ p["w1"][e]) * (xf[t] @ p["w3"][e])
+            out[t] += float(gv[t, j]) * np.asarray(h @ p["w2"][e])
+    y = out.reshape(b, s, d)
+    if cfg.num_shared_experts:
+        y = y + np.asarray(L.mlp_block(p["shared"], x, cfg.act), np.float32)
+    return y
+
+
+def test_moe_gather_dispatch_matches_naive_reference():
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        MC.ModelConfig(
+            name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+            num_kv_heads=2, head_dim=8, d_ff=0, vocab_size=64,
+            num_experts=5, experts_per_token=2, moe_d_ff=24,
+            capacity_factor=16.0,  # no drops → exact match expected
+            num_experts_alloc=8,   # padded experts must carry zero traffic
+        )
+    )
+    rng = np.random.default_rng(0)
+    ea = cfg.experts_alloc
+    p = {
+        "router": rng.standard_normal((cfg.d_model, ea)).astype(np.float32) * 0.5,
+        "w1": rng.standard_normal((ea, cfg.d_model, cfg.moe_d_ff)).astype(np.float32) * 0.2,
+        "w3": rng.standard_normal((ea, cfg.d_model, cfg.moe_d_ff)).astype(np.float32) * 0.2,
+        "w2": rng.standard_normal((ea, cfg.moe_d_ff, cfg.d_model)).astype(np.float32) * 0.2,
+    }
+    x = jnp.asarray(rng.standard_normal((2, 6, cfg.d_model)), jnp.float32)
+    got, aux = L.moe_block({k: jnp.asarray(v) for k, v in p.items()}, x, cfg)
+    want = _ref_moe(p, np.asarray(x), cfg)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0
+
+
+# ------------------------------------------------------------------ data
+@given(k=st.integers(1, 9), step=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_host_shards_tile_global_batch(k, step):
+    from repro.data import pipeline as dp
+
+    dc = dp.DataConfig(vocab_size=97, seq_len=8, global_batch=24)
+    gb = dp.global_batch(dc, step)
+    got = np.concatenate([dp.host_batch(dc, step, k, h)["tokens"] for h in range(k)])
+    np.testing.assert_array_equal(got, gb["tokens"])

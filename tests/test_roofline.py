@@ -1,0 +1,80 @@
+"""Roofline machinery unit tests: HLO shape/byte parsing, loop-aware
+collective accounting, analytic cost sanity."""
+import pytest
+
+from repro import configs
+from repro.launch import roofline as R
+from repro.models.config import SHAPES
+
+
+def test_shape_bytes():
+    assert R.shape_bytes("f32[16,512,9496]{2,1,0}") == 16 * 512 * 9496 * 4
+    assert R.shape_bytes("bf16[8]{0}") == 16
+    assert R.shape_bytes("(f32[2,2]{1,0}, bf16[4]{0})") == 16 + 8
+    assert R.shape_bytes("pred[]") == 1  # scalar: one element
+    assert R.shape_bytes("no shapes here") == 0
+
+
+HLO = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%wide.body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %ar = f32[4]{0} all-reduce(%x), to_apply=%add
+  ROOT %t = tuple(%i, %ar)
+}
+
+%wide.cond (p: (s32[], f32[4])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %w = (s32[], f32[4]) while(%init), condition=%wide.cond, body=%wide.body
+  %ag = f32[8]{0} all-gather(%y), dimensions={0}
+  ROOT %out = f32[4]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_bytes_weights_loops():
+    got = R.collective_bytes(HLO)
+    assert got["all-reduce"] == 7 * 16  # 7 trips × f32[4]
+    assert got["all-gather"] == 32
+    assert got["total"] == 7 * 16 + 32
+
+
+def test_trip_count_parse():
+    comps = R._split_computations(HLO)
+    assert "wide.cond" in comps and "wide.body" in comps and "main" in comps
+    assert R._trip_count(comps["wide.cond"]) == 7
+
+
+def test_roofline_terms_and_bottleneck():
+    r = R.Roofline(
+        flops_per_chip=1.97e14, hbm_bytes_per_chip=819e9 / 2,
+        collective_bytes_per_chip=50e9 / 4, chips=256, model_flops_global=1.97e14 * 256 * 0.5,
+    )
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(0.5)
+    assert r.t_collective == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    assert r.mfu_upper_bound == pytest.approx(0.5)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "deepseek-moe-16b", "mamba2-1.3b"])
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_analytic_costs_positive_and_ordered(arch, shape):
+    cfg = configs.get_config(arch)
+    c = R.analytic_costs(cfg, SHAPES[shape], 256, microbatches=4, model_shards=16)
+    assert c["flops_per_chip"] > 0 and c["hbm_bytes_per_chip"] > 0
+    # Training must cost more FLOPs than prefill which costs more than decode.
+    if shape == "train_4k":
+        pre = R.analytic_costs(cfg, SHAPES["prefill_32k"], 256, model_shards=16)
+        dec = R.analytic_costs(cfg, SHAPES["decode_32k"], 256, model_shards=16)
+        assert c["flops_per_chip"] > pre["flops_per_chip"] > dec["flops_per_chip"]
+
+
+def test_model_flops_moe_uses_active_params():
+    moe = configs.get_config("deepseek-moe-16b")
+    dense_equiv = R.model_flops(moe, SHAPES["train_4k"])
+    assert dense_equiv < 6 * moe.param_count() * SHAPES["train_4k"].global_batch * SHAPES["train_4k"].seq_len

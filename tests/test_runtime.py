@@ -1,0 +1,144 @@
+"""Elastic runtime tests: resharder, expert placement, controller, data
+pipeline, checkpoint+restore-with-rescale, optimizer."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cep
+from repro.data import pipeline as dp
+from repro.elastic import controller as ec
+from repro.elastic import expert_place as ep
+from repro.elastic import resharder as rs
+from repro.train import optimizer as O
+
+
+# ------------------------------------------------------------------ resharder
+def test_apply_reshard_preserves_data_and_moves_minimum():
+    n = 10_000
+    rng = np.random.default_rng(0)
+    flat = rng.standard_normal(n).astype(np.float32)
+    k_old, k_new = 8, 9
+    old = [rs.gather_host_shard(flat, k_old, h) for h in range(k_old)]
+    new, moved = rs.apply_reshard(old, n, k_old, k_new)
+    rebuilt = np.concatenate(new)
+    np.testing.assert_array_equal(rebuilt, flat)
+    assert moved == cep.migrated_edges_exact(n, k_old, k_new)
+    assert moved < n * k_old / (k_old + 1)  # beats hash-based reshuffle
+
+
+def test_reshard_plan_summary():
+    plan = rs.plan_reshard({"w": ((1024, 1024), 4), "b": ((1024,), 4)}, 16, 17)
+    s = plan.summary()
+    assert 0 < s["moved_frac"] < 0.6
+    assert s["moved_frac"] < s["random_frac"]
+
+
+# ------------------------------------------------------- expert placement
+def test_expert_placement_reduces_cross_group_traffic():
+    rng = np.random.default_rng(1)
+    e = 32
+    # Two co-activation communities of 16 experts each.
+    stats = rng.random((e, e)) * 0.1
+    stats[:16, :16] += 5.0
+    stats[16:, 16:] += 5.0
+    stats = (stats + stats.T) / 2
+    np.fill_diagonal(stats, 0)
+    order = ep.order_experts(stats)
+    assert sorted(order.tolist()) == list(range(e))
+    placed = ep.ExpertPlacement(order, k_groups=2)
+    naive = ep.ExpertPlacement(np.arange(e), k_groups=2)
+    rng2 = np.random.default_rng(2)
+    shuffled = ep.ExpertPlacement(rng2.permutation(e), k_groups=2)
+    t_placed = ep.cross_group_traffic(stats, placed)
+    t_shuffled = ep.cross_group_traffic(stats, shuffled)
+    assert t_placed < 0.7 * t_shuffled
+    # Elastic EP resize: O(1) plan, bounded movement.
+    placed2, moved = placed.rescale(3)
+    assert placed2.k_groups == 3 and 0 < moved <= e
+
+
+def test_coactivation_graph_from_routing_trace():
+    rng = np.random.default_rng(3)
+    ids = rng.integers(0, 16, size=(500, 2))
+    g = ep.coactivation_graph(ids, 16)
+    assert g.num_vertices == 16 and g.num_edges > 0
+
+
+# ----------------------------------------------------------------- controller
+def test_controller_detects_preemption_and_straggler():
+    t = [0.0]
+    ctl = ec.ElasticController(4, dead_after_s=5.0, straggler_lag_steps=10, clock=lambda: t[0])
+    for h in range(4):
+        ctl.heartbeat(h, step=100)
+    t[0] = 4.0
+    for h in range(3):  # host 3 goes silent (spot preemption)
+        ctl.heartbeat(h, step=110)
+    t[0] = 7.0
+    ev = ctl.poll()
+    assert ev and ev.kind == "scale_in" and ev.lost_hosts == (3,) and ctl.k == 3
+    assert 0 < ev.plan_edges_moved_frac < 1
+    # Straggler: host 2 stops progressing.
+    for step in (150, 200):
+        for h in (0, 1):
+            ctl.heartbeat(h, step)
+        ctl.heartbeat(2, 111)
+        t[0] += 1.0
+    ev2 = ctl.poll()
+    assert ev2 and ev2.kind == "straggler" and 2 in ev2.lost_hosts
+    ev3 = ctl.add_hosts(2)
+    assert ev3.kind == "scale_out" and ctl.k == 4
+
+
+# ------------------------------------------------------------------- data
+def test_data_pipeline_deterministic_and_elastic():
+    dc = dp.DataConfig(vocab_size=1000, seq_len=16, global_batch=64)
+    gb = dp.global_batch(dc, step=7)
+    assert gb["tokens"].shape == (64, 16)
+    # Union of host shards == global batch, for any k.
+    for k in (4, 5):
+        rows = [dp.host_batch(dc, 7, k, h) for h in range(k)]
+        got = np.concatenate([r["tokens"] for r in rows])
+        np.testing.assert_array_equal(got, gb["tokens"])
+    # Rescale plan touches < half the samples for +1 host.
+    plan = dp.rescale_moves(dc, 4, 5)
+    assert plan.migrated_edges <= 64 * 0.6
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.asarray([2.0, -3.0, 1.5])}
+    opt = O.OptConfig(peak_lr=0.1, warmup_steps=5, total_steps=200, weight_decay=0.0)
+    state = O.init_opt_state(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2)
+
+    p = params
+    for _ in range(150):
+        g = jax.grad(loss_fn)(p)
+        p, state, _ = O.adamw_update(p, g, state, opt)
+    assert float(loss_fn(p)) < 1e-2
+
+
+def test_lr_schedule_shape():
+    opt = O.OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(O.lr_schedule(opt, 0)) < 0.2
+    assert float(O.lr_schedule(opt, 10)) == pytest.approx(1.0, rel=0.05)
+    assert float(O.lr_schedule(opt, 99)) == pytest.approx(0.1, rel=0.15)
+
+
+# ------------------------------------------------------------------ checkpoint
+def test_checkpoint_save_restore_roundtrip(tmp_path):
+    from repro.checkpoint import store
+
+    tree = {
+        "a": jnp.arange(37, dtype=jnp.float32).reshape(37),
+        "nested": {"b": jnp.ones((5, 7), jnp.float32) * 3},
+    }
+    store.save(tree, tmp_path, step=3, k_shards=4)
+    restored, bytes_touched = store.restore(tmp_path, 3, k_new=5, template=tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(restored["nested"]["b"]), np.asarray(tree["nested"]["b"]))
+    assert bytes_touched > 0  # rescale 4→5 must account moved bytes
