@@ -14,6 +14,7 @@ MODULES = [
     ("fig10_11_quality", "benchmarks.bench_quality"),
     ("fig5_delta", "benchmarks.bench_delta"),
     ("fig13_migration", "benchmarks.bench_migration"),
+    ("rescale_exec", "benchmarks.bench_rescale_exec"),
     ("fig15_scalability", "benchmarks.bench_scalability"),
     ("table2_theory", "benchmarks.bench_theory"),
     ("table6_apps", "benchmarks.bench_apps"),

@@ -58,7 +58,10 @@ def id2p(num_edges, k, i):
     r = num_edges % k
     b = k - r  # number of small chunks
     cut = b * f  # first edge id owned by a large chunk
-    small = i // max(f, 1)
+    # k > |E| ⇒ f = 0 (all "small" chunks are empty; every edge lives in a
+    # size-1 "large" chunk). Guard the division branch-free so the formula
+    # stays valid for numpy arrays AND jax tracers (max(f, 1) is neither).
+    small = i // (f + (f == 0))
     large = b + (i - cut) // (f + 1)
     is_small = i < cut  # branch-free select: numpy- and jax-traceable
     return is_small * small + (1 - is_small) * large

@@ -12,11 +12,13 @@ from . import cep
 
 __all__ = [
     "partition_vertex_counts",
+    "chunk_vertex_counts_ordered",
     "replication_factor",
     "replication_factor_ordered",
     "edge_balance",
     "vertex_balance",
     "mirror_count",
+    "mirror_count_ordered",
     "comm_volume_bytes",
 ]
 
@@ -42,15 +44,30 @@ def replication_factor(src, dst, part, k, num_vertices) -> float:
     return float(counts.sum()) / float(nv)
 
 
-def replication_factor_ordered(src_ordered, dst_ordered, k, num_vertices) -> float:
-    """RF of CEP chunks over an already-ordered edge list."""
+def chunk_vertex_counts_ordered(src_ordered, dst_ordered, k) -> np.ndarray:
+    """|V(E_p)| per CEP chunk of an already-ordered edge list."""
     e = src_ordered.shape[0]
     bounds = cep.chunk_bounds(e, k)
-    total = 0
+    counts = np.zeros(k, dtype=np.int64)
     for p in range(k):
         lo, hi = int(bounds[p]), int(bounds[p + 1])
-        total += np.unique(np.concatenate([src_ordered[lo:hi], dst_ordered[lo:hi]])).shape[0]
-    return float(total) / float(num_vertices)
+        if hi > lo:
+            counts[p] = np.unique(np.concatenate([src_ordered[lo:hi], dst_ordered[lo:hi]])).shape[0]
+    return counts
+
+
+def replication_factor_ordered(src_ordered, dst_ordered, k, num_vertices) -> float:
+    """RF of CEP chunks over an already-ordered edge list."""
+    counts = chunk_vertex_counts_ordered(src_ordered, dst_ordered, k)
+    return float(counts.sum()) / float(num_vertices)
+
+
+def mirror_count_ordered(src_ordered, dst_ordered, k, num_vertices) -> int:
+    """mirror_count for CEP chunks of an ordered edge list (same definition:
+    Σ_p |V(E_p)| − |touched vertices|)."""
+    counts = chunk_vertex_counts_ordered(src_ordered, dst_ordered, k)
+    present = np.unique(np.concatenate([src_ordered, dst_ordered])).shape[0]
+    return int(counts.sum() - present)
 
 
 def edge_balance(part: np.ndarray, k: int) -> float:

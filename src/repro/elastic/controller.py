@@ -31,6 +31,7 @@ class ScaleEvent:
     lost_hosts: tuple
     plan_edges_moved_frac: float
     reason: str
+    executed: bool = False  # True when an attached engine was migrated on-device
 
 
 class ElasticController:
@@ -42,6 +43,7 @@ class ElasticController:
         straggler_lag_steps: int = 50,
         state_elements: int = 1_000_000,
         clock: Callable[[], float] = time.monotonic,
+        rescaler=None,
     ):
         self.clock = clock
         self.dead_after_s = dead_after_s
@@ -50,6 +52,9 @@ class ElasticController:
         now = self.clock()
         self.hosts = {h: HostState(h, now, 0) for h in range(num_hosts)}
         self.events: list[ScaleEvent] = []
+        self._rescaler = rescaler
+        self.engine_data = None  # packed EngineData migrated on scale events
+        self.rescale_stats: list = []
 
     @property
     def k(self) -> int:
@@ -94,11 +99,33 @@ class ElasticController:
                 )
         return None
 
+    def attach_engine(self, data) -> None:
+        """Attach packed graph-engine state (``engine.pack_ordered`` layout).
+
+        With an engine attached, every rescale decision is *executed*: the
+        emitted event carries ``executed=True`` and ``self.engine_data`` is
+        replaced by the migrated k_new EngineData (stats appended to
+        ``self.rescale_stats``) — not just a plan.
+        """
+        self.engine_data = data
+
     def _emit(self, kind, k_old, k_new, lost, reason) -> ScaleEvent:
-        if k_new == k_old or k_new == 0:
+        executed = False
+        if self.engine_data is not None and k_new not in (0, self.engine_data.k):
+            if self._rescaler is None:
+                from .rescale_exec import ElasticRescaler
+
+                self._rescaler = ElasticRescaler()
+            self.engine_data, stats = self._rescaler.rescale(self.engine_data, k_new)
+            self.rescale_stats.append(stats)
+            executed = True
+        if executed:
+            # Report what was actually migrated, not the synthetic model.
+            frac = stats.migrated_edges / max(stats.num_edges, 1)
+        elif k_new == k_old or k_new == 0:
             frac = 0.0
         else:
             frac = cep.migrated_edges_exact(self.state_elements, k_old, k_new) / self.state_elements
-        ev = ScaleEvent(kind, k_old, k_new, lost, frac, reason)
+        ev = ScaleEvent(kind, k_old, k_new, lost, frac, reason, executed)
         self.events.append(ev)
         return ev

@@ -15,10 +15,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..core import cep, metrics
 from ..core.graph import Graph
 
@@ -34,6 +35,7 @@ class EngineData:
     k: int
     mirrors: int  # Σ_p |V(E_p)| − |V(E)| — the paper's comm-volume metric
     replication_factor: float
+    num_edges: int = 0  # total valid (unpadded) edges across partitions
 
 
 def build_engine_data(g: Graph, part: np.ndarray, k: int) -> EngineData:
@@ -64,15 +66,58 @@ def build_engine_data(g: Graph, part: np.ndarray, k: int) -> EngineData:
         k=k,
         mirrors=mir,
         replication_factor=rf,
+        num_edges=g.num_edges,
     )
 
 
-def cep_engine_data(g: Graph, order: np.ndarray, k: int) -> EngineData:
-    part = np.empty(g.num_edges, dtype=np.int32)
-    b = cep.chunk_bounds(g.num_edges, k)
+def pack_ordered(src_ordered: np.ndarray, dst_ordered: np.ndarray, num_vertices: int, k: int) -> EngineData:
+    """Pack CEP chunks of an already-ordered edge list: partition p owns
+    ordered edge ids [bounds[p], bounds[p+1]), stored *in list order*.
+
+    This partition-major layout is exactly what elastic/rescale_exec.py's
+    range copies preserve, so an executed k_old → k_new migration is
+    bit-comparable against a from-scratch pack at k_new.
+    """
+    e = int(src_ordered.shape[0])
+    b = cep.chunk_bounds(e, k)
+    sizes = np.diff(b)
+    e_max = int(sizes.max())
+    edges = np.zeros((k, e_max, 2), dtype=np.int32)
+    mask = np.zeros((k, e_max), dtype=np.float32)
     for p in range(k):
-        part[order[int(b[p]) : int(b[p + 1])]] = p
-    return build_engine_data(g, part, k)
+        lo, hi = int(b[p]), int(b[p + 1])
+        c = hi - lo
+        edges[p, :c, 0] = src_ordered[lo:hi]
+        edges[p, :c, 1] = dst_ordered[lo:hi]
+        mask[p, :c] = 1.0
+    deg = np.zeros(num_vertices, dtype=np.float32)
+    np.add.at(deg, src_ordered, 1.0)
+    np.add.at(deg, dst_ordered, 1.0)
+    mir = metrics.mirror_count_ordered(src_ordered, dst_ordered, k, num_vertices)
+    rf = metrics.replication_factor_ordered(src_ordered, dst_ordered, k, num_vertices)
+    return EngineData(
+        edges=jnp.asarray(edges),
+        mask=jnp.asarray(mask),
+        degrees=jnp.asarray(deg),
+        num_vertices=num_vertices,
+        k=k,
+        mirrors=mir,
+        replication_factor=rf,
+        num_edges=e,
+    )
+
+
+def unpack_ordered(data: EngineData) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side inverse of pack_ordered: the flat ordered (src, dst) lists."""
+    edges = np.asarray(data.edges)
+    counts = np.asarray(data.mask).astype(bool).sum(axis=1)
+    src = np.concatenate([edges[p, : counts[p], 0] for p in range(data.k)])
+    dst = np.concatenate([edges[p, : counts[p], 1] for p in range(data.k)])
+    return src, dst
+
+
+def cep_engine_data(g: Graph, order: np.ndarray, k: int) -> EngineData:
+    return pack_ordered(g.src[order], g.dst[order], g.num_vertices, k)
 
 
 def _sharded(fn, mesh, data: EngineData, extra_in=(), extra_out=P()):

@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax
 
+from ..compat import mesh_axis_sizes as _mesh_axis_sizes
+
 SINGLE_POD = (16, 16)
 MULTI_POD = (2, 16, 16)
 
@@ -23,7 +25,7 @@ def make_test_mesh(data: int = 1, model: int = 1):
 
 
 def mesh_axis_sizes(mesh) -> dict:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+    return _mesh_axis_sizes(mesh)
 
 
 def num_chips(mesh) -> int:

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from ..compat import axis_size, mesh_axis_size, mesh_axis_sizes, shard_map
 
 _CTX: Optional["Distribution"] = None
 
@@ -39,8 +40,7 @@ class Distribution:
 
     @property
     def tp_size(self) -> int:
-        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
-        return sizes.get(self.tp_axis, 1)
+        return mesh_axis_size(self.mesh, self.tp_axis)
 
 
 # --------------------------------------------------------- activation hints
@@ -80,7 +80,7 @@ def dp_size() -> int:
     dist = current()
     if dist is None or not dist.batch_axes:
         return 1
-    sizes = dict(zip(dist.mesh.axis_names, dist.mesh.devices.shape))
+    sizes = mesh_axis_sizes(dist.mesh)
     n = 1
     for a in dist.batch_axes:
         n *= sizes[a]
@@ -165,7 +165,7 @@ def sp_decode_attention(dist, q, ck, cv, pos, *, window, softcap, scale, norm_ep
         mult = 1
         for ax in reversed(seq_axes):
             idx = idx + lax.axis_index(ax) * mult
-            mult *= lax.axis_size(ax)
+            mult *= axis_size(ax)
         start = idx * s_loc
         qg = qv.reshape(qv.shape[0], hkv, g, hd).astype(jnp.float32)
         kf = kv.astype(jnp.float32)
@@ -223,7 +223,7 @@ def sp_cache_update(dist, cache, new_kv, pos):
         mult = 1
         for ax in reversed(seq_axes):
             idx = idx + lax.axis_index(ax) * mult
-            mult *= lax.axis_size(ax)
+            mult *= axis_size(ax)
         off = pos - idx * s_loc
         in_range = (off >= 0) & (off < s_loc)
         safe = jnp.clip(off, 0, s_loc - 1)

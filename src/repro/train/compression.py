@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from ..compat import shard_map
 
 
 def quantize(g, *, bits: int = 8):

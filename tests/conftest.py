@@ -1,0 +1,39 @@
+"""Shared test helpers.
+
+`hypothesis` is an *optional* test dependency (see requirements-test.txt).
+Property-based tests must skip cleanly when it is absent instead of breaking
+collection for their whole module (which is what a bare
+``from hypothesis import given`` does, and a module-level
+``pytest.importorskip`` would throw away every deterministic test in the
+module too).
+"""
+import pytest
+
+
+def hypothesis_or_stub():
+    """Return ``(given, settings, st)``.
+
+    With hypothesis installed these are the real objects. Without it,
+    ``given(...)`` decorates the test with a skip marker and ``settings`` /
+    ``st`` are inert placeholders, so deterministic tests in the same module
+    still collect and run.
+    """
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        return given, settings, st
+    except ModuleNotFoundError:
+        skip = pytest.mark.skip(reason="hypothesis not installed")
+
+        class _Strategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def given(*a, **k):
+            return lambda fn: skip(fn)
+
+        def settings(*a, **k):
+            return lambda fn: fn
+
+        return given, settings, _Strategies()

@@ -1,10 +1,11 @@
 """CEP unit + property tests (paper §3.3, Thms 1 & 2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stub
 
 from repro.core import cep
+
+given, settings, st = hypothesis_or_stub()
 
 
 def test_paper_example_fig3():
@@ -97,3 +98,29 @@ def test_id2p_is_jax_traceable():
     got = f(jnp.arange(14))
     expect = [cep.id2p_loop(14, 4, i) for i in range(14)]
     assert list(np.asarray(got)) == expect
+
+
+def test_id2p_matches_loop_exhaustive_small_grids():
+    """Regression for the k > |E| (f = 0) degenerate case: id2p must agree
+    with the paper's Algorithm-2 loop for every i on exhaustive small grids,
+    scalar and vectorized alike."""
+    for e in range(1, 26):
+        for k in range(1, 31):  # includes every e < k combination
+            ids = np.arange(e)
+            vec = np.asarray(cep.id2p(e, k, ids))
+            loop = np.array([cep.id2p_loop(e, k, i) for i in range(e)])
+            np.testing.assert_array_equal(vec, loop, err_msg=f"e={e} k={k}")
+            for i in range(e):  # scalar-int path too
+                assert int(cep.id2p(e, k, i)) == loop[i]
+
+
+def test_id2p_traceable_with_dynamic_num_edges():
+    """id2p must trace with |E| itself a tracer (used by jitted rescale
+    planning) — including the f = 0 branch, where the old max(f, 1) guard
+    raised TracerBoolConversionError."""
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda e, i: cep.id2p(e, 5, i))
+    for e, i in [(3, 0), (3, 2), (4, 3), (17, 11), (5, 4)]:
+        assert int(f(jnp.asarray(e), jnp.asarray(i))) == cep.id2p_loop(e, 5, i)

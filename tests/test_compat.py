@@ -1,0 +1,91 @@
+"""compat layer: portable shard_map / axis_size / mesh helpers / donate_jit.
+
+The repo rule is "never import shard_map directly" — these tests pin the
+behaviours the rest of the codebase relies on, on whatever jax is installed.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.launch import mesh as MM
+
+
+def test_no_direct_shard_map_imports_outside_compat():
+    import pathlib
+    import re
+
+    # Catches every spelling: "from jax import lax, shard_map" (the seed
+    # repo's exact bug), "from jax.experimental import shard_map",
+    # "from jax.experimental.shard_map import ...", "jax.shard_map(...)".
+    direct = re.compile(
+        r"from\s+jax(\.[\w.]+)?\s+import\s+[^\n]*\bshard_map\b"
+        r"|\bjax(\.\w+)*\.shard_map\b"
+    )
+    root = pathlib.Path(compat.__file__).parent
+    offenders = []
+    for path in root.rglob("*.py"):
+        if path.name == "compat.py":
+            continue
+        if direct.search(path.read_text()):
+            offenders.append(str(path))
+    assert not offenders, f"import shard_map via repro.compat, not directly: {offenders}"
+
+
+def test_jax_version_tuple():
+    assert compat.JAX_VERSION >= (0, 4, 35), "support policy: jax >= 0.4.35"
+
+
+def test_shard_map_runs_with_check_vma_kwarg():
+    mesh = MM.make_test_mesh(data=1, model=1)
+
+    def local(x):
+        return lax.psum(x, "data")
+
+    fn = compat.shard_map(local, mesh=mesh, in_specs=P("data"), out_specs=P(), check_vma=False)
+    x = jnp.arange(4, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(fn(x)), np.asarray(x))
+
+
+def test_axis_size_inside_shard_map():
+    mesh = MM.make_test_mesh(data=1, model=1)
+
+    def local(x):
+        return x * compat.axis_size("data")
+
+    fn = compat.shard_map(local, mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
+    assert int(fn(jnp.asarray(3))) == 3  # axis size is 1 on the test mesh
+
+
+def test_mesh_axis_helpers():
+    mesh = MM.make_test_mesh(data=1, model=1)
+    assert compat.mesh_axis_sizes(mesh) == {"data": 1, "model": 1}
+    assert compat.mesh_axis_size(mesh, "model") == 1
+    assert compat.mesh_axis_size(mesh, "nonexistent") == 1
+    assert compat.mesh_axis_size(mesh, "nonexistent", default=7) == 7
+
+
+def test_donate_jit_matches_jit_and_stays_quiet():
+    def f(x, y):
+        return x + y
+
+    x = jnp.arange(8, dtype=jnp.float32)
+    y = jnp.ones(8, dtype=jnp.float32)
+    fn = compat.donate_jit(f, donate_argnums=(0,))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any donation warning would fail here
+        got = fn(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.arange(8) + 1.0)
+
+
+def test_donate_jit_decorator_form():
+    @compat.donate_jit(donate_argnums=(0,))
+    def g(x):
+        return 2 * x
+
+    assert int(g(jnp.asarray(21))) == 42

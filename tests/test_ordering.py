@@ -1,11 +1,12 @@
 """GEO ordering tests (paper §4, Thm. 6) + Alg.3/Alg.4 cross-checks."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stub
 
 from repro.core import cep, metrics, ordering, theory
 from repro.core.graph import Graph, grid_graph, powerlaw_graph, ring_graph, rmat_graph
+
+given, settings, st = hypothesis_or_stub()
 
 
 def _rf_of_order(g, order, k):

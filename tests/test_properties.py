@@ -3,14 +3,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stub
 
 from repro.core import cep, metrics, ordering
 from repro.core.graph import rmat_graph
 from repro.models import config as MC
 from repro.models import layers as L
 from repro.models import model as M
+
+given, settings, st = hypothesis_or_stub()
 
 
 # ------------------------------------------------------------------ orderings

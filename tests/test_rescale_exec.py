@@ -1,0 +1,169 @@
+"""ElasticRescaler: executed k_old → k_new migration ≡ from-scratch packing,
+with exactly ScalePlan.migrated_bytes of cross-partition traffic."""
+import numpy as np
+import pytest
+
+from repro.core import baselines, cep, ordering
+from repro.core.graph import rmat_graph
+from repro.elastic import controller as ec
+from repro.elastic.rescale_exec import EDGE_BYTES, ElasticRescaler
+from repro.graphs import engine as E
+
+
+@pytest.fixture(scope="module")
+def ordered():
+    g = rmat_graph(8, 6, seed=0)
+    order = ordering.geo_order(g, seed=0)
+    return g, g.src[order], g.dst[order]
+
+
+@pytest.fixture(scope="module")
+def rescaler():
+    return ElasticRescaler()
+
+
+# Scale-out and scale-in, including non-adjacent k and co-prime pairs.
+PAIRS = [(8, 12), (12, 8), (4, 5), (5, 4), (16, 20), (20, 16), (3, 7), (2, 3)]
+
+
+@pytest.mark.parametrize("k_old,k_new", PAIRS)
+def test_executed_equals_from_scratch(ordered, rescaler, k_old, k_new):
+    g, src, dst = ordered
+    data = E.pack_ordered(src, dst, g.num_vertices, k_old)
+    plan = cep.scale_plan(g.num_edges, k_old, k_new)
+    new, stats = rescaler.execute(data, plan, verify=True)
+    want = E.pack_ordered(src, dst, g.num_vertices, k_new)
+    np.testing.assert_array_equal(np.asarray(new.edges), np.asarray(want.edges))
+    np.testing.assert_array_equal(np.asarray(new.mask), np.asarray(want.mask))
+    np.testing.assert_array_equal(np.asarray(new.degrees), np.asarray(want.degrees))
+    assert new.k == k_new and new.num_edges == g.num_edges
+    # Metrics re-check must agree with the from-scratch pack's quality numbers.
+    assert new.mirrors == want.mirrors
+    assert new.replication_factor == pytest.approx(want.replication_factor, abs=0)
+    assert stats.oracle_checked
+
+
+@pytest.mark.parametrize("k_old,k_new", PAIRS)
+def test_bytes_copied_equal_plan_migrated_bytes(ordered, rescaler, k_old, k_new):
+    g, src, dst = ordered
+    data = E.pack_ordered(src, dst, g.num_vertices, k_old)
+    plan = cep.scale_plan(g.num_edges, k_old, k_new)
+    _, stats = rescaler.execute(data, plan)
+    assert stats.migrated_edges == plan.migrated_edges
+    assert stats.migrated_bytes == plan.migrated_bytes(EDGE_BYTES)
+    # Moved + stayed rows account for every edge exactly once.
+    assert stats.migrated_edges + stats.stay_edges == g.num_edges
+    # The program is O(overlay ranges), never O(|E|).
+    assert stats.copy_ops <= k_old + k_new
+
+
+def test_roundtrip_bit_identical(ordered, rescaler):
+    g, src, dst = ordered
+    d8 = E.pack_ordered(src, dst, g.num_vertices, 8)
+    d12, _ = rescaler.rescale(d8, 12, verify=True)
+    back, _ = rescaler.rescale(d12, 8, verify=True)
+    orig = E.pack_ordered(src, dst, g.num_vertices, 8)
+    np.testing.assert_array_equal(np.asarray(back.edges), np.asarray(orig.edges))
+    np.testing.assert_array_equal(np.asarray(back.mask), np.asarray(orig.mask))
+    assert back.mirrors == orig.mirrors
+
+
+def test_degenerate_more_partitions_than_edges(rescaler):
+    g = rmat_graph(4, 1, seed=2)  # tiny: |E| can be < k_new
+    order = np.arange(g.num_edges)
+    src, dst = g.src[order], g.dst[order]
+    k_new = g.num_edges + 5
+    data = E.pack_ordered(src, dst, g.num_vertices, 2)
+    new, _ = rescaler.rescale(data, k_new, verify=True)
+    want = E.pack_ordered(src, dst, g.num_vertices, k_new)
+    np.testing.assert_array_equal(np.asarray(new.edges), np.asarray(want.edges))
+
+
+def test_rejects_non_cep_layout(ordered, rescaler):
+    g, _, _ = ordered
+    hashed = E.build_engine_data(g, baselines.hash_1d(g, 4), 4)
+    with pytest.raises(ValueError, match="not CEP-chunked"):
+        rescaler.rescale(hashed, 5)
+
+
+def test_rejects_mismatched_plan(ordered, rescaler):
+    g, src, dst = ordered
+    data = E.pack_ordered(src, dst, g.num_vertices, 4)
+    with pytest.raises(ValueError, match="k_old"):
+        rescaler.execute(data, cep.scale_plan(g.num_edges, 5, 6))
+    with pytest.raises(ValueError, match=r"\|E\|"):
+        rescaler.execute(data, cep.scale_plan(g.num_edges + 1, 4, 5))
+
+
+def test_unpack_ordered_roundtrip(ordered):
+    g, src, dst = ordered
+    data = E.pack_ordered(src, dst, g.num_vertices, 7)
+    s2, d2 = E.unpack_ordered(data)
+    np.testing.assert_array_equal(s2, src)
+    np.testing.assert_array_equal(d2, dst)
+
+
+def test_controller_executes_attached_engine(ordered):
+    g, src, dst = ordered
+    t = [0.0]
+    ctl = ec.ElasticController(4, dead_after_s=5.0, clock=lambda: t[0])
+    ctl.attach_engine(E.pack_ordered(src, dst, g.num_vertices, 4))
+    t[0] = 1.0
+    for h in (0, 1, 2):
+        ctl.heartbeat(h, 1)
+    t[0] = 5.6  # host 3 missed its beat; 0-2 are fresh
+    ev = ctl.poll()
+    assert ev is not None and ev.kind == "scale_in" and ev.executed
+    assert ctl.engine_data.k == 3
+    want = E.pack_ordered(src, dst, g.num_vertices, 3)
+    np.testing.assert_array_equal(np.asarray(ctl.engine_data.edges), np.asarray(want.edges))
+    assert ctl.rescale_stats[0].migrated_edges == cep.migrated_edges_exact(g.num_edges, 4, 3)
+    # Executed events report the fraction actually migrated, not the
+    # synthetic state_elements model.
+    assert ev.plan_edges_moved_frac == pytest.approx(
+        ctl.rescale_stats[0].migrated_edges / g.num_edges
+    )
+
+
+def test_controller_without_engine_still_plans_only():
+    t = [0.0]
+    ctl = ec.ElasticController(3, dead_after_s=5.0, clock=lambda: t[0])
+    t[0] = 1.0
+    ctl.heartbeat(0, 1)
+    ctl.heartbeat(1, 1)
+    t[0] = 5.6
+    ev = ctl.poll()
+    assert ev is not None and not ev.executed and ctl.engine_data is None
+
+
+def test_rescaled_engine_runs_pagerank(ordered):
+    """The migrated EngineData is live engine state, not just buffers."""
+    from repro.launch import mesh as MM
+
+    g, src, dst = ordered
+    mesh = MM.make_test_mesh(data=1, model=1)
+    d4 = E.pack_ordered(src, dst, g.num_vertices, 4)
+    p4 = np.asarray(E.pagerank(d4, mesh, iterations=20))  # before: d4 is donated
+    d6, _ = ElasticRescaler().rescale(d4, 6)
+    p6 = np.asarray(E.pagerank(d6, mesh, iterations=20))
+    np.testing.assert_allclose(p4, p6, rtol=1e-5, atol=1e-8)
+
+
+def test_recheck_false_skips_host_metrics(ordered, rescaler):
+    g, src, dst = ordered
+    data = E.pack_ordered(src, dst, g.num_vertices, 4)
+    new, stats = rescaler.rescale(data, 6, recheck=False)
+    assert new.mirrors == -1 and np.isnan(new.replication_factor)
+    assert stats.recheck_s == 0.0 or stats.recheck_s < 1e-3
+    # Buffers are still the real migration result.
+    want = E.pack_ordered(src, dst, g.num_vertices, 6)
+    np.testing.assert_array_equal(np.asarray(new.edges), np.asarray(want.edges))
+
+
+def test_noop_rescale_returns_same_buffers():
+    g = rmat_graph(6, 4, seed=1)
+    order = np.arange(g.num_edges)
+    data = E.pack_ordered(g.src[order], g.dst[order], g.num_vertices, 3)
+    new, stats = ElasticRescaler().rescale(data, 3)
+    assert new is data and stats.migrated_edges == 0 and stats.copy_ops == 0
+    np.asarray(new.edges)  # must NOT have been donated away
