@@ -32,6 +32,7 @@ class ScaleEvent:
     plan_edges_moved_frac: float
     reason: str
     executed: bool = False  # True when an attached engine was migrated on-device
+    cross_device_bytes: int = 0  # executed device-to-device traffic (mesh runs)
 
 
 class ElasticController:
@@ -99,18 +100,30 @@ class ElasticController:
                 )
         return None
 
-    def attach_engine(self, data) -> None:
+    def attach_engine(self, data, mesh=None) -> None:
         """Attach packed graph-engine state (``engine.pack_ordered`` layout).
 
         With an engine attached, every rescale decision is *executed*: the
         emitted event carries ``executed=True`` and ``self.engine_data`` is
-        replaced by the migrated k_new EngineData (stats appended to
+        replaced by the migrated k_new engine data (stats appended to
         ``self.rescale_stats``) — not just a plan.
+
+        Passing ``mesh`` (a ``graph``-axis mesh from launch.mesh.make_graph_mesh)
+        distributes the pack over its devices first, so every subsequent scale
+        event is executed as an on-mesh migration and reports the device-to-
+        device traffic it actually generated (``ScaleEvent.cross_device_bytes``).
+        A ``ShardedEngineData`` may also be attached directly.
         """
+        if mesh is not None:
+            from ..graphs import engine as graph_engine
+
+            if not isinstance(data, graph_engine.ShardedEngineData):
+                data = graph_engine.shard_engine_data(data, mesh)
         self.engine_data = data
 
     def _emit(self, kind, k_old, k_new, lost, reason) -> ScaleEvent:
         executed = False
+        cross_device_bytes = 0
         if self.engine_data is not None and k_new not in (0, self.engine_data.k):
             if self._rescaler is None:
                 from .rescale_exec import ElasticRescaler
@@ -119,6 +132,7 @@ class ElasticController:
             self.engine_data, stats = self._rescaler.rescale(self.engine_data, k_new)
             self.rescale_stats.append(stats)
             executed = True
+            cross_device_bytes = stats.cross_device_bytes
         if executed:
             # Report what was actually migrated, not the synthetic model.
             frac = stats.migrated_edges / max(stats.num_edges, 1)
@@ -126,6 +140,6 @@ class ElasticController:
             frac = 0.0
         else:
             frac = cep.migrated_edges_exact(self.state_elements, k_old, k_new) / self.state_elements
-        ev = ScaleEvent(kind, k_old, k_new, lost, frac, reason, executed)
+        ev = ScaleEvent(kind, k_old, k_new, lost, frac, reason, executed, cross_device_bytes)
         self.events.append(ev)
         return ev

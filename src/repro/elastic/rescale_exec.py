@@ -2,24 +2,40 @@
 
 ``cep.scale_plan(k_old → k_new)`` names the ≤ k_old + k_new − 1 ordered-edge
 ranges whose owner changes; everything else stays where it is. This module
-applies such a plan directly to the packed ``(k, E_max, 2)`` device buffers of
+applies such a plan directly to the packed ``(k, E_max, 2)`` buffers of
 graphs/engine.py as ONE jitted program of static slice copies, with the old
 buffer donated — so executing a rescale costs O(overlay ranges) program size
 and moves exactly the Thm.-2-minimal edge ranges across partitions, instead of
 re-running any partitioner or re-packing from the host.
 
+The same program executes on both layouts (DESIGN.md §6):
+
+* ``EngineData`` — the replicated single-buffer pack. Partition p is row p;
+  every copy is device-local. This is the degenerate mesh-of-1 case.
+* ``ShardedEngineData`` — the pack distributed over a mesh's ``graph`` axis.
+  Rows are permuted device-major (partition p on device p % g), the output
+  carries the k_new NamedSharding, and XLA's SPMD partitioner turns exactly
+  the plan's cross-device boundary ranges into device-to-device transfers
+  while stays and local shifts compile to shard-local slice copies.
+
 Cost accounting distinguishes what a real multi-host deployment would see:
 
-* ``migrated_*`` — rows whose owner partition changes (network traffic; equals
+* ``migrated_*`` — rows whose owner *partition* changes (equals
   ``ScalePlan.migrated_bytes`` by construction, asserted in tests);
+* ``cross_device_*`` — the subset of migrated rows whose source and
+  destination partitions live on different mesh devices (actual network /
+  interconnect traffic; on a mesh of 1 this is 0);
+* ``on_device_edges`` — migrated rows whose partitions share a device
+  (cross_device_edges + on_device_edges == migrated_edges);
 * ``local_shift_edges`` — rows that keep their owner but land at a different
   slot in the padded buffer because the chunk start moved (device-local
-  memmove, no network);
+  memmove, never network);
 * pure stays are untouched semantically and alias through buffer donation on
   backends that implement it.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 
@@ -30,10 +46,21 @@ import numpy as np
 from ..compat import donate_jit
 from ..core import cep, metrics
 from ..graphs import engine as graph_engine
+from ..launch import sharding as SH
 
-__all__ = ["EDGE_BYTES", "RescaleStats", "ElasticRescaler"]
+__all__ = ["EDGE_BYTES", "RescaleStats", "ElasticRescaler", "plan_segments"]
 
 EDGE_BYTES = 8  # (src, dst) int32 per packed edge row
+
+
+def plan_segments(plan: cep.ScalePlan) -> list:
+    """The plan's overlay as ordered (lo, hi, src_part, dst_part) copy
+    segments — stays spelled src == dst. This is the exact instruction list of
+    the migration program; benchmarks reuse it for per-device accounting."""
+    return sorted(
+        [(lo, hi, p, p) for lo, hi, p in plan.stay]
+        + [(lo, hi, s, d) for lo, hi, s, d in plan.moves]
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,7 +68,7 @@ class RescaleStats:
     k_old: int
     k_new: int
     num_edges: int
-    migrated_edges: int  # cross-partition rows (network)
+    migrated_edges: int  # cross-partition rows (owner changed)
     migrated_bytes: int  # migrated_edges · EDGE_BYTES
     stay_edges: int  # rows whose owner is unchanged
     local_shift_edges: int  # stays that changed slot inside their partition
@@ -49,30 +76,44 @@ class RescaleStats:
     oracle_checked: bool  # compared bit-exactly vs a from-scratch pack
     elapsed_s: float  # wall time of the device program (blocked)
     recheck_s: float  # host-side metrics re-check (+ oracle compare) time
+    devices: int = 1  # graph-axis size the program ran over
+    cross_device_edges: int = 0  # migrated rows crossing a device boundary
+    cross_device_bytes: int = 0  # cross_device_edges · EDGE_BYTES
+    on_device_edges: int = 0  # migrated rows staying on their device
 
 
 class ElasticRescaler:
-    """Executes ``cep.ScalePlan``s against packed ``EngineData``.
+    """Executes ``cep.ScalePlan``s against packed engine state.
 
-    Jitted migration programs are cached per (num_edges, k_old, k_new) so a
-    controller oscillating between two cluster sizes pays tracing once.
-    ``verify=True`` re-packs from scratch on the host and asserts bit-equality
-    (the tests' oracle); the metrics re-check (mirrors, replication factor)
-    always runs so the returned EngineData is self-consistent.
+    Accepts both ``EngineData`` (replicated pack; mesh-of-1 degenerate case)
+    and ``ShardedEngineData`` (partitions distributed round-robin over a
+    ``graph`` mesh axis) — one program builder serves both, parameterized only
+    by the row permutation and output sharding.
+
+    Jitted migration programs are cached per (num_edges, k_old, k_new, mesh)
+    in a bounded LRU (``program_cache_size``) so a controller oscillating
+    between cluster sizes pays tracing once without the cache growing without
+    limit across a long-lived serving process. ``verify=True`` re-packs from
+    scratch on the host and asserts bit-equality (the tests' oracle); the
+    metrics re-check (mirrors, replication factor) keeps the returned data
+    self-consistent.
     """
 
-    def __init__(self, *, donate: bool = True):
+    def __init__(self, *, donate: bool = True, program_cache_size: int = 8):
+        if program_cache_size < 1:
+            raise ValueError("program_cache_size must be >= 1")
         self.donate = donate
-        self._programs: dict = {}
+        self.program_cache_size = int(program_cache_size)
+        self._programs: collections.OrderedDict = collections.OrderedDict()
 
     # ------------------------------------------------------------- planning
-    def plan(self, data: graph_engine.EngineData, k_new: int) -> cep.ScalePlan:
+    def plan(self, data, k_new: int) -> cep.ScalePlan:
         return cep.scale_plan(data.num_edges, data.k, k_new)
 
     # ------------------------------------------------------------ execution
     def execute(
         self,
-        data: graph_engine.EngineData,
+        data,
         plan: cep.ScalePlan,
         *,
         verify: bool = False,
@@ -81,28 +122,37 @@ class ElasticRescaler:
         """Apply ``plan`` to ``data``; returns ``(new_data, RescaleStats)``.
 
         ``data`` must be CEP-chunked (partition p = ordered range p, as built
-        by ``pack_ordered`` / ``cep_engine_data``). The old edge buffer is
-        donated to the migration program: treat ``data`` as CONSUMED — on
+        by ``pack_ordered`` / ``pack_ordered_sharded``). The old edge buffer
+        is donated to the migration program: treat ``data`` as CONSUMED — on
         backends where XLA can alias it, reading ``data.edges`` afterwards
         raises "Array has been deleted".
 
         ``recheck=True`` recomputes mirrors / replication factor for k_new —
         an O(|E|) host pass (readback + per-chunk uniques). Latency-critical
         callers can pass ``recheck=False`` to keep the pure O(overlay-ranges)
-        migration cost; the returned EngineData then carries ``mirrors=-1``,
+        migration cost; the returned data then carries ``mirrors=-1``,
         ``replication_factor=nan`` (engine algorithms never read them).
         ``verify=True`` implies the readback regardless.
         """
         n, k_old, k_new = plan.num_edges, plan.k_old, plan.k_new
+        sharded = isinstance(data, graph_engine.ShardedEngineData)
+        mesh = data.mesh if sharded else None
+        g = SH.graph_axis_size(mesh)
         if data.k != k_old:
-            raise ValueError(f"plan is for k_old={k_old} but EngineData has k={data.k}")
+            raise ValueError(f"plan is for k_old={k_old} but engine data has k={data.k}")
         if data.num_edges != n:
-            raise ValueError(f"plan is for |E|={n} but EngineData has |E|={data.num_edges}")
-        counts = np.asarray(data.mask).astype(bool).sum(axis=1)
-        want = np.diff(cep.chunk_bounds(n, k_old))
+            raise ValueError(f"plan is for |E|={n} but engine data has |E|={data.num_edges}")
+        # Layout check without gathering the full mask: reduce per-row counts
+        # on device (sharded, O(k_pad) ints to host) so recheck=False keeps
+        # the O(overlay-ranges) migration cost on a real mesh.
+        counts = np.asarray(jnp.sum(data.mask > 0, axis=1))
+        sizes_old = np.diff(cep.chunk_bounds(n, k_old))
+        want = np.zeros(counts.shape[0], dtype=sizes_old.dtype)
+        for p in range(k_old):  # padding rows (sharded pack) must stay empty
+            want[SH.partition_row(p, k_old, g)] = sizes_old[p]
         if not np.array_equal(counts, want):
             raise ValueError(
-                "EngineData is not CEP-chunked (per-partition edge counts "
+                "engine data is not CEP-chunked (per-row edge counts "
                 f"{counts.tolist()} != chunk sizes {want.tolist()}); "
                 "range-copy rescaling only applies to pack_ordered layouts"
             )
@@ -114,6 +164,7 @@ class ElasticRescaler:
                 k_old=k_old, k_new=k_new, num_edges=n, migrated_edges=0,
                 migrated_bytes=0, stay_edges=n, local_shift_edges=0,
                 copy_ops=0, oracle_checked=False, elapsed_s=0.0, recheck_s=0.0,
+                devices=g,
             )
             return data, stats
 
@@ -122,9 +173,13 @@ class ElasticRescaler:
         # metrics re-check and — crucially independent of the program's output
         # — the verify=True from-scratch oracle.
         readback = recheck or verify
-        src_o, dst_o = graph_engine.unpack_ordered(data) if readback else (None, None)
+        if readback:
+            flat = graph_engine.unshard_engine_data(data) if sharded else data
+            src_o, dst_o = graph_engine.unpack_ordered(flat)
+        else:
+            src_o, dst_o = None, None
 
-        program, stats_base = self._program(n, k_old, k_new, plan)
+        program, stats_base = self._program(n, k_old, k_new, plan, mesh)
         t0 = time.perf_counter()
         new_edges, new_mask = program(data.edges)
         jax.block_until_ready(new_edges)
@@ -140,15 +195,14 @@ class ElasticRescaler:
             rf = float(counts_v.sum()) / float(data.num_vertices)
         else:
             mirrors, rf = -1, float("nan")
-        new_data = graph_engine.EngineData(
+        # Same fields for both layouts (ShardedEngineData keeps its mesh).
+        new_data = dataclasses.replace(
+            data,
             edges=new_edges,
             mask=new_mask,
-            degrees=data.degrees,
-            num_vertices=data.num_vertices,
             k=k_new,
             mirrors=mirrors,
             replication_factor=rf,
-            num_edges=n,
         )
 
         oracle_checked = False
@@ -156,9 +210,10 @@ class ElasticRescaler:
             # From-scratch pack of the ORIGINAL ordered list at k_new — a
             # mis-routed move segment cannot fool this.
             oracle = graph_engine.pack_ordered(src_o, dst_o, data.num_vertices, k_new)
+            got = graph_engine.unshard_engine_data(new_data) if sharded else new_data
             if not (
-                np.array_equal(np.asarray(oracle.edges), np.asarray(new_edges))
-                and np.array_equal(np.asarray(oracle.mask), np.asarray(new_mask))
+                np.array_equal(np.asarray(oracle.edges), np.asarray(got.edges))
+                and np.array_equal(np.asarray(oracle.mask), np.asarray(got.mask))
             ):
                 raise AssertionError("executed rescale does not match from-scratch pack")
             oracle_checked = True
@@ -171,7 +226,7 @@ class ElasticRescaler:
 
     def rescale(
         self,
-        data: graph_engine.EngineData,
+        data,
         k_new: int,
         *,
         verify: bool = False,
@@ -181,22 +236,32 @@ class ElasticRescaler:
         return self.execute(data, self.plan(data, k_new), verify=verify, recheck=recheck)
 
     # -------------------------------------------------------------- interns
-    def _program(self, n: int, k_old: int, k_new: int, plan: cep.ScalePlan):
-        key = (n, k_old, k_new)
+    def _program(self, n: int, k_old: int, k_new: int, plan: cep.ScalePlan, mesh):
+        g = SH.graph_axis_size(mesh)
+        key = (n, k_old, k_new, mesh)
         cached = self._programs.get(key)
         if cached is not None:
+            self._programs.move_to_end(key)
             return cached
 
         bo = cep.chunk_bounds(n, k_old)
         bn = cep.chunk_bounds(n, k_new)
         sizes_new = np.diff(bn)
         e_max_new = int(sizes_new.max())
-        segments = sorted(
-            [(lo, hi, p, p) for lo, hi, p in plan.stay]
-            + [(lo, hi, s, d) for lo, hi, s, d in plan.moves]
-        )
+        k_pad_new = SH.padded_partition_count(k_new, g)
+        # Device-major row of each partition in the old / new layouts. On a
+        # mesh of 1 both are the identity and the program below is exactly the
+        # historical single-buffer slice-copy program.
+        row_old = [SH.partition_row(p, k_old, g) for p in range(k_old)]
+        row_new = [SH.partition_row(p, k_new, g) for p in range(k_new)]
+        segments = plan_segments(plan)
         local_shift = sum(
             hi - lo for lo, hi, s, d in segments if s == d and int(bo[s]) != int(bn[s])
+        )
+        cross = sum(
+            hi - lo
+            for lo, hi, s, d in plan.moves
+            if SH.partition_device(s, g) != SH.partition_device(d, g)
         )
         stats = RescaleStats(
             k_old=k_old,
@@ -210,21 +275,34 @@ class ElasticRescaler:
             oracle_checked=False,
             elapsed_s=0.0,
             recheck_s=0.0,
+            devices=g,
+            cross_device_edges=int(cross),
+            cross_device_bytes=int(cross) * EDGE_BYTES,
+            on_device_edges=plan.migrated_edges - int(cross),
         )
+        mask_rows = np.zeros(k_pad_new, dtype=np.int64)
+        for p in range(k_new):
+            mask_rows[row_new[p]] = sizes_new[p]
         mask_new = jnp.asarray(
-            (np.arange(e_max_new)[None, :] < sizes_new[:, None]).astype(np.float32)
+            (np.arange(e_max_new)[None, :] < mask_rows[:, None]).astype(np.float32)
         )
 
         def migrate(edges_old):
-            new = jnp.zeros((k_new, e_max_new, 2), edges_old.dtype)
+            new = jnp.zeros((k_pad_new, e_max_new, 2), edges_old.dtype)
             for lo, hi, s, d in segments:
-                seg = edges_old[s, lo - int(bo[s]) : hi - int(bo[s]), :]
-                new = new.at[d, lo - int(bn[d]) : hi - int(bn[d]), :].set(seg)
+                seg = edges_old[row_old[s], lo - int(bo[s]) : hi - int(bo[s]), :]
+                new = new.at[row_new[d], lo - int(bn[d]) : hi - int(bn[d]), :].set(seg)
             return new, mask_new
 
+        jit_kwargs: dict = {}
+        if mesh is not None:
+            s_edges, s_mask, _ = SH.engine_shardings(mesh)
+            jit_kwargs["out_shardings"] = (s_edges, s_mask)
         if self.donate:
-            program = donate_jit(migrate, donate_argnums=(0,))
+            program = donate_jit(migrate, donate_argnums=(0,), **jit_kwargs)
         else:
-            program = jax.jit(migrate)
+            program = jax.jit(migrate, **jit_kwargs)
         self._programs[key] = (program, stats)
+        while len(self._programs) > self.program_cache_size:
+            self._programs.popitem(last=False)
         return program, stats

@@ -7,6 +7,17 @@ scatter-add into a (V,) accumulator (VPU-friendly), combined across devices
 with psum/pmin. Per-iteration *communication volume* is reported with the
 paper's own mirror metric (Σ_p |V(E_p)| − |V|), which is what the partition
 quality controls on a real sparse-exchange system.
+
+Two layouts (DESIGN.md §6):
+
+* ``EngineData`` — the replicated pack: one (k, E_max, 2) buffer, partition p
+  at row p. Fine on one device; the ``data`` mesh axis splits rows.
+* ``ShardedEngineData`` — the distributed pack: a (k_pad, E_max, 2) buffer
+  carrying a NamedSharding over the ``graph`` mesh axis, rows in device-major
+  round-robin order (partition p on device p % g, at row
+  launch.sharding.partition_row(p, k, g)). GAS iteration shard_maps directly
+  over the sharded rows, and elastic/rescale_exec.py executes ScalePlans on it
+  as on-mesh migrations.
 """
 from __future__ import annotations
 
@@ -22,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 from ..compat import shard_map
 from ..core import cep, metrics
 from ..core.graph import Graph
+from ..launch import sharding as SH
 
 AXIS = "data"
 
@@ -120,12 +132,110 @@ def cep_engine_data(g: Graph, order: np.ndarray, k: int) -> EngineData:
     return pack_ordered(g.src[order], g.dst[order], g.num_vertices, k)
 
 
-def _sharded(fn, mesh, data: EngineData, extra_in=(), extra_out=P()):
-    in_specs = (P(AXIS, None, None), P(AXIS, None)) + tuple(extra_in)
+# ------------------------------------------------------------ sharded layout
+@dataclasses.dataclass(frozen=True)
+class ShardedEngineData:
+    """EngineData distributed over the ``graph`` axis of a mesh.
+
+    ``edges``/``mask`` are (k_pad, E_max, 2) / (k_pad, E_max) arrays committed
+    with a NamedSharding that splits the leading axis over ``graph``; rows are
+    in device-major round-robin order (partition p at row
+    ``launch.sharding.partition_row(p, k, g)``, hence on device p % g). Rows
+    whose partition id ≥ k are padding: all-zero, fully masked. ``degrees`` is
+    replicated. A mesh of 1 makes this layout bit-identical to ``EngineData``.
+    """
+
+    edges: jnp.ndarray  # (k_pad, E_max, 2) int32, sharded P("graph", ∅, ∅)
+    mask: jnp.ndarray  # (k_pad, E_max) f32, sharded P("graph", ∅)
+    degrees: jnp.ndarray  # (V,) f32, replicated
+    num_vertices: int
+    k: int  # logical partition count (rows may exceed it: k_pad = ⌈k/g⌉·g)
+    mesh: object  # jax.sharding.Mesh with a "graph" axis
+    mirrors: int
+    replication_factor: float
+    num_edges: int = 0
+
+    @property
+    def devices(self) -> int:
+        return SH.graph_axis_size(self.mesh)
+
+    @property
+    def k_pad(self) -> int:
+        return int(self.edges.shape[0])
+
+    @property
+    def rows_per_device(self) -> int:
+        return self.k_pad // self.devices
+
+    def partition_device(self, p: int) -> int:
+        return SH.partition_device(p, self.devices)
+
+
+def shard_engine_data(data: EngineData, mesh) -> ShardedEngineData:
+    """Distribute a packed EngineData over ``mesh``'s ``graph`` axis."""
+    g = SH.graph_axis_size(mesh)
+    k = data.k
+    k_pad = SH.padded_partition_count(k, g)
+    e_max = int(data.edges.shape[1])
+    edges = np.zeros((k_pad, e_max, 2), dtype=np.int32)
+    mask = np.zeros((k_pad, e_max), dtype=np.float32)
+    rows = [SH.partition_row(p, k, g) for p in range(k)]
+    edges[rows] = np.asarray(data.edges)
+    mask[rows] = np.asarray(data.mask)
+    s_edges, s_mask, s_vert = SH.engine_shardings(mesh)
+    return ShardedEngineData(
+        edges=jax.device_put(jnp.asarray(edges), s_edges),
+        mask=jax.device_put(jnp.asarray(mask), s_mask),
+        degrees=jax.device_put(jnp.asarray(data.degrees), s_vert),
+        num_vertices=data.num_vertices,
+        k=k,
+        mesh=mesh,
+        mirrors=data.mirrors,
+        replication_factor=data.replication_factor,
+        num_edges=data.num_edges,
+    )
+
+
+def unshard_engine_data(sdata: ShardedEngineData) -> EngineData:
+    """Host-side inverse of shard_engine_data: gather + un-permute rows back to
+    the partition-major replicated pack (the bit-identity oracle layout)."""
+    rows = [SH.partition_row(p, sdata.k, sdata.devices) for p in range(sdata.k)]
+    return EngineData(
+        edges=jnp.asarray(np.asarray(sdata.edges)[rows]),
+        mask=jnp.asarray(np.asarray(sdata.mask)[rows]),
+        degrees=jnp.asarray(np.asarray(sdata.degrees)),
+        num_vertices=sdata.num_vertices,
+        k=sdata.k,
+        mirrors=sdata.mirrors,
+        replication_factor=sdata.replication_factor,
+        num_edges=sdata.num_edges,
+    )
+
+
+def pack_ordered_sharded(
+    src_ordered: np.ndarray, dst_ordered: np.ndarray, num_vertices: int, k: int, mesh
+) -> ShardedEngineData:
+    """pack_ordered, distributed: CEP chunks land round-robin on mesh devices."""
+    return shard_engine_data(pack_ordered(src_ordered, dst_ordered, num_vertices, k), mesh)
+
+
+def _axis_and_mesh(data, mesh):
+    """GAS dispatch: ShardedEngineData iterates over its own ``graph`` mesh;
+    the replicated pack keeps the historical ``data``-axis path."""
+    if isinstance(data, ShardedEngineData):
+        return SH.GRAPH_AXIS, (mesh if mesh is not None else data.mesh)
+    if mesh is None:
+        raise ValueError("EngineData (replicated pack) requires an explicit mesh")
+    return AXIS, mesh
+
+
+def _sharded(fn, mesh, axis, extra_in=(), extra_out=P()):
+    in_specs = (P(axis, None, None), P(axis, None)) + tuple(extra_in)
     return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=extra_out, check_vma=False)
 
 
-def pagerank(data: EngineData, mesh, *, iterations: int = 20, damping: float = 0.85):
+def pagerank(data, mesh=None, *, iterations: int = 20, damping: float = 0.85):
+    axis, mesh = _axis_and_mesh(data, mesh)
     v = data.num_vertices
     deg = jnp.maximum(data.degrees, 1.0)
 
@@ -137,9 +247,9 @@ def pagerank(data: EngineData, mesh, *, iterations: int = 20, damping: float = 0
         # Undirected: each edge pushes both ways (vertex-cut GAS scatter).
         y = y.at[e[:, 1]].add(contrib[e[:, 0]] * m)
         y = y.at[e[:, 0]].add(contrib[e[:, 1]] * m)
-        return lax.psum(y, AXIS)
+        return lax.psum(y, axis)
 
-    step = _sharded(local, mesh, data, extra_in=(P(),), extra_out=P())
+    step = _sharded(local, mesh, axis, extra_in=(P(),), extra_out=P())
     dangling = data.degrees == 0
 
     def body(x, _):
@@ -154,7 +264,8 @@ def pagerank(data: EngineData, mesh, *, iterations: int = 20, damping: float = 0
     return x
 
 
-def sssp(data: EngineData, mesh, *, source: int = 0, max_iters: int = 64):
+def sssp(data, mesh=None, *, source: int = 0, max_iters: int = 64):
+    axis, mesh = _axis_and_mesh(data, mesh)
     v = data.num_vertices
     inf = jnp.float32(1e9)
 
@@ -166,9 +277,9 @@ def sssp(data: EngineData, mesh, *, source: int = 0, max_iters: int = 64):
         dv = jnp.where(m, dist[e[:, 1]] + 1.0, inf)
         cand = cand.at[e[:, 1]].min(du)
         cand = cand.at[e[:, 0]].min(dv)
-        return lax.pmin(cand, AXIS)
+        return lax.pmin(cand, axis)
 
-    step = _sharded(local, mesh, data, extra_in=(P(),), extra_out=P())
+    step = _sharded(local, mesh, axis, extra_in=(P(),), extra_out=P())
 
     def cond(state):
         _, changed, it = state
@@ -185,7 +296,8 @@ def sssp(data: EngineData, mesh, *, source: int = 0, max_iters: int = 64):
     return dist, int(iters)
 
 
-def wcc(data: EngineData, mesh, *, max_iters: int = 64):
+def wcc(data, mesh=None, *, max_iters: int = 64):
+    axis, mesh = _axis_and_mesh(data, mesh)
     v = data.num_vertices
 
     def local(edges, mask, lab):
@@ -197,9 +309,9 @@ def wcc(data: EngineData, mesh, *, max_iters: int = 64):
         lv = jnp.where(m, lab[e[:, 1]], big)
         cand = cand.at[e[:, 1]].min(lu)
         cand = cand.at[e[:, 0]].min(lv)
-        return lax.pmin(cand, AXIS)
+        return lax.pmin(cand, axis)
 
-    step = _sharded(local, mesh, data, extra_in=(P(),), extra_out=P())
+    step = _sharded(local, mesh, axis, extra_in=(P(),), extra_out=P())
 
     def cond(state):
         _, changed, it = state

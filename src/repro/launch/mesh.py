@@ -24,6 +24,18 @@ def make_test_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_graph_mesh(devices: int | None = None):
+    """1-D mesh with the ``graph`` axis that owns graph partitions.
+
+    ``devices=None`` spans every visible device; a single-device mesh is the
+    degenerate case the elastic runtime treats identically (DESIGN.md §6).
+    Partitions are assigned round-robin to axis positions — see
+    launch/sharding.py partition_row / partition_device.
+    """
+    n = len(jax.devices()) if devices is None else int(devices)
+    return jax.make_mesh((n,), ("graph",))
+
+
 def mesh_axis_sizes(mesh) -> dict:
     return _mesh_axis_sizes(mesh)
 

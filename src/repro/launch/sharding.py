@@ -15,6 +15,74 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 
+GRAPH_AXIS = "graph"  # mesh axis owning graph partitions (DESIGN.md §6)
+
+
+def graph_axis_size(mesh) -> int:
+    """Size of the ``graph`` axis; 1 when the mesh doesn't have one (so a
+    mesh-less / single-device run is the degenerate case of the same rules)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(GRAPH_AXIS, 1))
+
+
+def padded_partition_count(k: int, g: int) -> int:
+    """k rounded up to a multiple of the graph-axis size g. The extra
+    partitions are empty (mask 0 everywhere) — k need not equal, divide, or
+    exceed the device count."""
+    return ((k + g - 1) // g) * g
+
+
+def partition_device(p: int, g: int) -> int:
+    """Round-robin assignment: partition p lives on graph-axis position p % g."""
+    return p % g
+
+
+def partition_row(p: int, k: int, g: int) -> int:
+    """Buffer row of partition p in the device-major packed layout.
+
+    NamedSharding over the leading axis gives device d the contiguous row
+    block [d·m, (d+1)·m) with m = k_pad/g; storing partition p at row
+    (p % g)·m + p // g therefore realizes the round-robin assignment
+    device(p) = p % g. With g = 1 this is the identity (row p = partition p),
+    which is exactly the single-device pack_ordered layout.
+    """
+    m = padded_partition_count(k, g) // g
+    return (p % g) * m + p // g
+
+
+def row_partition(r: int, k: int, g: int) -> int:
+    """Inverse of partition_row. May return p >= k: that row is a padding
+    partition (empty, masked)."""
+    m = padded_partition_count(k, g) // g
+    return (r % m) * g + r // m
+
+
+def edges_spec() -> P:
+    """(k_pad, E_max, 2) packed edge buffer: partitions over the graph axis."""
+    return P(GRAPH_AXIS, None, None)
+
+
+def mask_spec() -> P:
+    """(k_pad, E_max) validity mask: same leading-axis sharding as edges."""
+    return P(GRAPH_AXIS, None)
+
+
+def vertex_spec() -> P:
+    """(V,) vertex state (degrees, ranks, labels): replicated — every device
+    scatters into its own copy and the GAS combine is a psum/pmin."""
+    return P()
+
+
+def engine_shardings(mesh: Mesh) -> tuple:
+    """NamedShardings for (edges, mask, degrees) of a sharded engine pack."""
+    return (
+        NamedSharding(mesh, edges_spec()),
+        NamedSharding(mesh, mask_spec()),
+        NamedSharding(mesh, vertex_spec()),
+    )
+
+
 def _axes_size(mesh: Mesh, axes) -> int:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     if isinstance(axes, str):

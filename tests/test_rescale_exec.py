@@ -167,3 +167,130 @@ def test_noop_rescale_returns_same_buffers():
     new, stats = ElasticRescaler().rescale(data, 3)
     assert new is data and stats.migrated_edges == 0 and stats.copy_ops == 0
     np.asarray(new.edges)  # must NOT have been donated away
+
+
+def test_program_cache_is_lru_bounded(ordered):
+    g, src, dst = ordered
+    r = ElasticRescaler(program_cache_size=2)
+    for k_old, k_new in [(4, 5), (5, 6), (6, 7)]:  # 3 distinct program keys
+        data = E.pack_ordered(src, dst, g.num_vertices, k_old)
+        r.rescale(data, k_new, verify=True)
+    assert len(r._programs) == 2
+    # (4, 5) was evicted (LRU); re-executing it retraces and still verifies.
+    keys = list(r._programs)
+    assert all(key[1:3] != (4, 5) for key in keys)
+    data = E.pack_ordered(src, dst, g.num_vertices, 4)
+    _, stats = r.rescale(data, 5, verify=True)
+    assert stats.oracle_checked and len(r._programs) == 2
+    # A cache hit refreshes recency instead of evicting.
+    data = E.pack_ordered(src, dst, g.num_vertices, 4)
+    r.rescale(data, 5)
+    assert len(r._programs) == 2 and list(r._programs)[-1][1:3] == (4, 5)
+
+
+def test_program_cache_size_validation():
+    with pytest.raises(ValueError, match="program_cache_size"):
+        ElasticRescaler(program_cache_size=0)
+
+
+# ----------------------- sharded path, degenerate mesh of 1 (tier-1 safe) ----
+@pytest.fixture(scope="module")
+def graph_mesh():
+    from repro.launch import mesh as MM
+
+    return MM.make_graph_mesh(1)
+
+
+def test_single_device_stats_have_no_cross_device_traffic(ordered, rescaler):
+    g, src, dst = ordered
+    data = E.pack_ordered(src, dst, g.num_vertices, 8)
+    _, stats = rescaler.rescale(data, 12)
+    assert stats.devices == 1 and stats.cross_device_edges == 0
+    assert stats.on_device_edges == stats.migrated_edges
+
+
+@pytest.mark.parametrize("k_old,k_new", [(8, 12), (12, 8), (3, 7)])
+def test_sharded_mesh1_bit_identical(ordered, rescaler, graph_mesh, k_old, k_new):
+    """Mesh of 1 is the degenerate case of the sharded path, not a fork: the
+    executed migration must still match the single-device oracle bit-for-bit."""
+    g, src, dst = ordered
+    sdata = E.pack_ordered_sharded(src, dst, g.num_vertices, k_old, graph_mesh)
+    new, stats = rescaler.rescale(sdata, k_new, verify=True)
+    assert isinstance(new, E.ShardedEngineData) and new.k == k_new
+    assert stats.devices == 1 and stats.cross_device_edges == 0
+    want = E.pack_ordered(src, dst, g.num_vertices, k_new)
+    got = E.unshard_engine_data(new)
+    np.testing.assert_array_equal(np.asarray(got.edges), np.asarray(want.edges))
+    np.testing.assert_array_equal(np.asarray(got.mask), np.asarray(want.mask))
+
+
+def test_sharded_roundtrip_bit_identical(ordered, rescaler, graph_mesh):
+    g, src, dst = ordered
+    d8 = E.pack_ordered_sharded(src, dst, g.num_vertices, 8, graph_mesh)
+    d12, _ = rescaler.rescale(d8, 12, verify=True)
+    back, _ = rescaler.rescale(d12, 8, verify=True)
+    orig = E.pack_ordered(src, dst, g.num_vertices, 8)
+    got = E.unshard_engine_data(back)
+    np.testing.assert_array_equal(np.asarray(got.edges), np.asarray(orig.edges))
+    np.testing.assert_array_equal(np.asarray(got.mask), np.asarray(orig.mask))
+
+
+def test_sharded_noop_returns_same_object(ordered, graph_mesh):
+    g, src, dst = ordered
+    sdata = E.pack_ordered_sharded(src, dst, g.num_vertices, 4, graph_mesh)
+    new, stats = ElasticRescaler().rescale(sdata, 4)
+    assert new is sdata and stats.copy_ops == 0 and stats.devices == 1
+    np.asarray(new.edges)  # must NOT have been donated away
+
+
+def test_sharded_more_partitions_than_edges(graph_mesh):
+    g = rmat_graph(4, 1, seed=2)  # tiny: |E| < k_new ⇒ zero-size chunks
+    order = np.arange(g.num_edges)
+    src, dst = g.src[order], g.dst[order]
+    k_new = g.num_edges + 5
+    sdata = E.pack_ordered_sharded(src, dst, g.num_vertices, 2, graph_mesh)
+    new, stats = ElasticRescaler().rescale(sdata, k_new, verify=True)
+    assert stats.oracle_checked and new.k == k_new
+    want = E.pack_ordered(src, dst, g.num_vertices, k_new)
+    got = E.unshard_engine_data(new)
+    np.testing.assert_array_equal(np.asarray(got.edges), np.asarray(want.edges))
+
+
+def test_sharded_rejects_non_cep_layout(ordered, graph_mesh):
+    g, _, _ = ordered
+    hashed = E.build_engine_data(g, baselines.hash_1d(g, 4), 4)
+    sdata = E.shard_engine_data(hashed, graph_mesh)
+    with pytest.raises(ValueError, match="not CEP-chunked"):
+        ElasticRescaler().rescale(sdata, 5)
+
+
+def test_sharded_rescaled_engine_runs_pagerank(ordered, graph_mesh):
+    g, src, dst = ordered
+    d4 = E.pack_ordered_sharded(src, dst, g.num_vertices, 4, graph_mesh)
+    d6, _ = ElasticRescaler().rescale(d4, 6)
+    p_sharded = np.asarray(E.pagerank(d6, iterations=20))  # mesh from the data
+    from repro.launch import mesh as MM
+
+    ref = E.pack_ordered(src, dst, g.num_vertices, 6)
+    p_ref = np.asarray(E.pagerank(ref, MM.make_test_mesh(1, 1), iterations=20))
+    np.testing.assert_allclose(p_sharded, p_ref, rtol=1e-6, atol=1e-9)
+
+
+def test_controller_attach_engine_with_mesh(ordered, graph_mesh):
+    g, src, dst = ordered
+    t = [0.0]
+    ctl = ec.ElasticController(4, dead_after_s=5.0, clock=lambda: t[0])
+    ctl.attach_engine(E.pack_ordered(src, dst, g.num_vertices, 4), mesh=graph_mesh)
+    assert isinstance(ctl.engine_data, E.ShardedEngineData)
+    t[0] = 1.0
+    for h in (0, 1, 2):
+        ctl.heartbeat(h, 1)
+    t[0] = 5.6
+    ev = ctl.poll()
+    assert ev is not None and ev.executed and ctl.engine_data.k == 3
+    # Mesh of 1: everything migrated on-device, so no cross-device traffic.
+    assert ev.cross_device_bytes == 0
+    assert ctl.rescale_stats[0].on_device_edges == ctl.rescale_stats[0].migrated_edges
+    want = E.pack_ordered(src, dst, g.num_vertices, 3)
+    got = E.unshard_engine_data(ctl.engine_data)
+    np.testing.assert_array_equal(np.asarray(got.edges), np.asarray(want.edges))
