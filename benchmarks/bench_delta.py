@@ -14,8 +14,12 @@ def run(scale: int = 11, edge_factor: int = 10) -> None:
     g = bench_graph(scale, edge_factor)
     ks = (4, 8, 16, 32, 64, 128)
     base_delta = max(1, g.num_edges // 128)
-    for mult, label in [(0, "0"), (1, "1x"), (10, "10x"), (100, "100x")]:
-        delta = max(1, base_delta * mult) if mult else 1
+    # Label and value must agree: δ=1 is the no-two-hop floor (labeled "1",
+    # not "0"), the rest are true multiples of the paper's default δ.
+    series = [("1", 1)] + [(f"{m}x", base_delta * m) for m in (1, 10, 100)]
+    assert all(delta >= 1 for _, delta in series)
+    assert dict(series)["1x"] == base_delta and dict(series)["10x"] == 10 * base_delta
+    for label, delta in series:
         t0 = time.perf_counter()
         order = ordering.geo_order(g, delta=delta, seed=0)
         t = (time.perf_counter() - t0) * 1e6
@@ -23,7 +27,7 @@ def run(scale: int = 11, edge_factor: int = 10) -> None:
             metrics.replication_factor_ordered(g.src[order], g.dst[order], k, g.num_vertices)
             for k in ks
         ])
-        emit(f"fig5/delta_{label}", t, f"avg_rf={rf:.3f}")
+        emit(f"fig5/delta_{label}", t, f"avg_rf={rf:.3f},delta={delta}")
 
 
 if __name__ == "__main__":

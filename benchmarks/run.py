@@ -15,6 +15,7 @@ MODULES = [
     ("fig5_delta", "benchmarks.bench_delta"),
     ("fig13_migration", "benchmarks.bench_migration"),
     ("rescale_exec", "benchmarks.bench_rescale_exec"),
+    ("stream_ingest", "benchmarks.bench_stream"),
     ("fig15_scalability", "benchmarks.bench_scalability"),
     ("table2_theory", "benchmarks.bench_theory"),
     ("table6_apps", "benchmarks.bench_apps"),

@@ -50,6 +50,26 @@ def main() -> None:
           f"{stats.migrated_bytes:,}B over {stats.copy_ops} slice copies, "
           f"bit-identical to a from-scratch k=17 pack (RF={new_data.replication_factor:.3f})")
 
+    # 6. STREAM updates while staying rescalable: incremental ordering on the
+    #    host, scatter-based ingest on device, full-GEO quality oracle.
+    #    (Full scenario + committed numbers: python -m benchmarks.run stream
+    #    → BENCH_stream.json.)
+    from repro.launch import mesh as MM
+    from repro.stream import IncrementalOrderer, StreamingEngine, SyntheticStream
+
+    orderer = IncrementalOrderer(src, dst, g.num_vertices, regions=8)
+    engine = StreamingEngine(orderer, MM.make_graph_mesh(1))
+    stream = SyntheticStream(g, batch_size=256, seed=1)
+    for _ in range(4):
+        st = engine.ingest(stream.batch(), verify=True)
+        engine.monitor()
+    rs = engine.rescale(12, verify=True)
+    rf_inc, rf_oracle = engine.rf_vs_oracle()
+    print(f"streamed 4x256 updates (last batch {st.elapsed_s*1e3:.1f}ms, "
+          f"bit-identical to host oracle), rescaled 8→12 live in "
+          f"{rs.elapsed_s*1e3:.1f}ms; RF {rf_inc:.3f} vs full-GEO {rf_oracle:.3f} "
+          f"({rf_inc/rf_oracle:.2f}x)")
+
 
 if __name__ == "__main__":
     main()

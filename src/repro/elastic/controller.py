@@ -5,6 +5,13 @@ controller detects dead hosts (missed beats) and stragglers (progress lag),
 and emits ScaleEvents whose migration plans come from CEP — so reacting to a
 spot-instance preemption costs an O(k) plan + Thm.-2-minimal data movement,
 which is exactly the paper's motivating scenario (§1).
+
+With a streaming engine attached (``attach_stream``) the controller also
+accepts graph updates: ``ingest`` applies an EdgeUpdateBatch on-device and
+runs the quality monitor, whose escalation ladder is ingest → partial
+re-order → full GEO repartition (DESIGN.md §9). Every event — scale or
+ingest — carries a monotonic ``seq`` from one shared counter, so interleaved
+logs have a total order regardless of wall-clock resolution.
 """
 from __future__ import annotations
 
@@ -33,6 +40,20 @@ class ScaleEvent:
     reason: str
     executed: bool = False  # True when an attached engine was migrated on-device
     cross_device_bytes: int = 0  # executed device-to-device traffic (mesh runs)
+    seq: int = -1  # monotonic event sequence, shared with IngestEvents
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestEvent:
+    kind: str  # always "ingest" (mirrors ScaleEvent.kind for shared logs)
+    inserted: int
+    deleted: int
+    skipped: int
+    escalation: str  # "none" | "partial" | "full" — monitor's ladder step
+    num_edges: int  # live edges after the batch
+    elapsed_s: float  # host placement + device ingest (excludes the monitor)
+    monitor_s: float = 0.0  # quality monitor + any escalation it ran
+    seq: int = -1
 
 
 class ElasticController:
@@ -52,10 +73,17 @@ class ElasticController:
         self.state_elements = state_elements
         now = self.clock()
         self.hosts = {h: HostState(h, now, 0) for h in range(num_hosts)}
-        self.events: list[ScaleEvent] = []
+        self.events: list = []  # ScaleEvents + IngestEvents, ordered by seq
         self._rescaler = rescaler
+        self._seq = 0  # one counter for all event kinds
         self.engine_data = None  # packed EngineData migrated on scale events
+        self.stream = None  # StreamingEngine: scale events + ingest run on it
         self.rescale_stats: list = []
+
+    def _next_seq(self) -> int:
+        s = self._seq
+        self._seq += 1
+        return s
 
     @property
     def k(self) -> int:
@@ -121,10 +149,51 @@ class ElasticController:
                 data = graph_engine.shard_engine_data(data, mesh)
         self.engine_data = data
 
+    def attach_stream(self, stream) -> None:
+        """Attach a live ``stream.ingest.StreamingEngine``.
+
+        Scale events then execute as on-mesh compactions of the streaming
+        pack (``StreamingEngine.rescale``) and ``ingest`` becomes available.
+        Takes precedence over ``attach_engine`` state: a streaming graph's
+        pack has gaps, which the range-copy rescaler correctly rejects.
+        """
+        self.stream = stream
+
+    def ingest(self, batch) -> IngestEvent:
+        """Apply an EdgeUpdateBatch to the attached stream, run the quality
+        monitor (escalation ladder: ingest → partial re-order → full GEO
+        repartition), and log the event in the shared seq order."""
+        if self.stream is None:
+            raise ValueError("no streaming engine attached (call attach_stream first)")
+        stats = self.stream.ingest(batch)
+        t0 = time.perf_counter()
+        escalation = self.stream.monitor()
+        monitor_s = time.perf_counter() - t0
+        ev = IngestEvent(
+            kind="ingest",
+            inserted=stats.inserted,
+            deleted=stats.deleted,
+            skipped=stats.skipped,
+            escalation=escalation,
+            num_edges=stats.num_edges,
+            elapsed_s=stats.elapsed_s,
+            monitor_s=monitor_s,
+            seq=self._next_seq(),
+        )
+        self.events.append(ev)
+        return ev
+
     def _emit(self, kind, k_old, k_new, lost, reason) -> ScaleEvent:
         executed = False
         cross_device_bytes = 0
-        if self.engine_data is not None and k_new not in (0, self.engine_data.k):
+        frac = None
+        if self.stream is not None and k_new not in (0, self.stream.k):
+            stats = self.stream.rescale(k_new)
+            self.rescale_stats.append(stats)
+            executed = True
+            cross_device_bytes = stats.cross_device_bytes
+            frac = stats.moved_edges / max(stats.num_edges, 1)
+        elif self.stream is None and self.engine_data is not None and k_new not in (0, self.engine_data.k):
             if self._rescaler is None:
                 from .rescale_exec import ElasticRescaler
 
@@ -133,13 +202,16 @@ class ElasticController:
             self.rescale_stats.append(stats)
             executed = True
             cross_device_bytes = stats.cross_device_bytes
-        if executed:
             # Report what was actually migrated, not the synthetic model.
             frac = stats.migrated_edges / max(stats.num_edges, 1)
-        elif k_new == k_old or k_new == 0:
-            frac = 0.0
-        else:
-            frac = cep.migrated_edges_exact(self.state_elements, k_old, k_new) / self.state_elements
-        ev = ScaleEvent(kind, k_old, k_new, lost, frac, reason, executed, cross_device_bytes)
+        if frac is None:
+            if k_new == k_old or k_new == 0:
+                frac = 0.0
+            else:
+                frac = cep.migrated_edges_exact(self.state_elements, k_old, k_new) / self.state_elements
+        ev = ScaleEvent(
+            kind, k_old, k_new, lost, frac, reason, executed, cross_device_bytes,
+            seq=self._next_seq(),
+        )
         self.events.append(ev)
         return ev

@@ -48,9 +48,44 @@ from ..core import cep, metrics
 from ..graphs import engine as graph_engine
 from ..launch import sharding as SH
 
-__all__ = ["EDGE_BYTES", "RescaleStats", "ElasticRescaler", "plan_segments"]
+__all__ = ["EDGE_BYTES", "ProgramCache", "RescaleStats", "ElasticRescaler", "plan_segments"]
 
 EDGE_BYTES = 8  # (src, dst) int32 per packed edge row
+
+
+class ProgramCache:
+    """Bounded LRU of jitted device programs keyed by their static shape/mesh
+    signature. One instance per program family (migration, ingest scatter,
+    streaming compact): a long-lived controller oscillating between
+    configurations pays tracing once per signature without the cache growing
+    without limit."""
+
+    def __init__(self, size: int):
+        if size < 1:
+            raise ValueError("program_cache_size must be >= 1")
+        self.size = int(size)
+        self._programs: collections.OrderedDict = collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def __contains__(self, key) -> bool:
+        return key in self._programs
+
+    def __iter__(self):
+        return iter(self._programs)  # keys, least- to most-recently used
+
+    def get(self, key):
+        cached = self._programs.get(key)
+        if cached is not None:
+            self._programs.move_to_end(key)
+        return cached
+
+    def put(self, key, value):
+        self._programs[key] = value
+        while len(self._programs) > self.size:
+            self._programs.popitem(last=False)
+        return value
 
 
 def plan_segments(plan: cep.ScalePlan) -> list:
@@ -100,11 +135,12 @@ class ElasticRescaler:
     """
 
     def __init__(self, *, donate: bool = True, program_cache_size: int = 8):
-        if program_cache_size < 1:
-            raise ValueError("program_cache_size must be >= 1")
         self.donate = donate
-        self.program_cache_size = int(program_cache_size)
-        self._programs: collections.OrderedDict = collections.OrderedDict()
+        self._programs = ProgramCache(program_cache_size)
+
+    @property
+    def program_cache_size(self) -> int:
+        return self._programs.size
 
     # ------------------------------------------------------------- planning
     def plan(self, data, k_new: int) -> cep.ScalePlan:
@@ -241,7 +277,6 @@ class ElasticRescaler:
         key = (n, k_old, k_new, mesh)
         cached = self._programs.get(key)
         if cached is not None:
-            self._programs.move_to_end(key)
             return cached
 
         bo = cep.chunk_bounds(n, k_old)
@@ -302,7 +337,4 @@ class ElasticRescaler:
             program = donate_jit(migrate, donate_argnums=(0,), **jit_kwargs)
         else:
             program = jax.jit(migrate, **jit_kwargs)
-        self._programs[key] = (program, stats)
-        while len(self._programs) > self.program_cache_size:
-            self._programs.popitem(last=False)
-        return program, stats
+        return self._programs.put(key, (program, stats))

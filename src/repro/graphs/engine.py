@@ -82,18 +82,33 @@ def build_engine_data(g: Graph, part: np.ndarray, k: int) -> EngineData:
     )
 
 
-def pack_ordered(src_ordered: np.ndarray, dst_ordered: np.ndarray, num_vertices: int, k: int) -> EngineData:
+def pack_ordered(
+    src_ordered: np.ndarray,
+    dst_ordered: np.ndarray,
+    num_vertices: int,
+    k: int,
+    *,
+    e_max: int | None = None,
+) -> EngineData:
     """Pack CEP chunks of an already-ordered edge list: partition p owns
     ordered edge ids [bounds[p], bounds[p+1]), stored *in list order*.
 
     This partition-major layout is exactly what elastic/rescale_exec.py's
     range copies preserve, so an executed k_old → k_new migration is
     bit-comparable against a from-scratch pack at k_new.
+
+    ``e_max`` overrides the per-partition row width: passing a value larger
+    than the biggest chunk leaves masked slack rows at each partition's tail —
+    the headroom the streaming subsystem's on-device ingest scatters new edges
+    into (DESIGN.md §9), same masked-rows convention as the k-padding of §6.
     """
     e = int(src_ordered.shape[0])
     b = cep.chunk_bounds(e, k)
     sizes = np.diff(b)
-    e_max = int(sizes.max())
+    if e_max is None:
+        e_max = int(sizes.max())
+    elif e_max < int(sizes.max()):
+        raise ValueError(f"e_max={e_max} is below the largest chunk ({int(sizes.max())})")
     edges = np.zeros((k, e_max, 2), dtype=np.int32)
     mask = np.zeros((k, e_max), dtype=np.float32)
     for p in range(k):
@@ -213,10 +228,65 @@ def unshard_engine_data(sdata: ShardedEngineData) -> EngineData:
 
 
 def pack_ordered_sharded(
-    src_ordered: np.ndarray, dst_ordered: np.ndarray, num_vertices: int, k: int, mesh
+    src_ordered: np.ndarray,
+    dst_ordered: np.ndarray,
+    num_vertices: int,
+    k: int,
+    mesh,
+    *,
+    e_max: int | None = None,
 ) -> ShardedEngineData:
     """pack_ordered, distributed: CEP chunks land round-robin on mesh devices."""
-    return shard_engine_data(pack_ordered(src_ordered, dst_ordered, num_vertices, k), mesh)
+    return shard_engine_data(
+        pack_ordered(src_ordered, dst_ordered, num_vertices, k, e_max=e_max), mesh
+    )
+
+
+# ------------------------------------------------------------- slot layout
+def pack_slots(
+    slot_src: np.ndarray,
+    slot_dst: np.ndarray,
+    slot_valid: np.ndarray,
+    k: int,
+    num_vertices: int,
+) -> EngineData:
+    """Pack a streaming slot array (stream/incremental.py) into engine buffers.
+
+    Region p's ``slots_per_region`` slots become partition p's first columns —
+    occupied slots keep their column (gaps are masked rows interleaved IN
+    PLACE, not compacted, so a host slot maps 1:1 to a device (row, col) and
+    an EdgeUpdateBatch applies as a scatter) — plus one trailing always-masked
+    scratch column that padded scatter ops target (stream/ingest.py). GAS
+    algorithms are mask-driven and run unchanged on this layout; this function
+    is also the streaming bit-identity oracle: on-device ingest, unsharded,
+    must equal it byte-for-byte.
+    """
+    slot_valid = np.asarray(slot_valid, dtype=bool)
+    c = int(slot_valid.shape[0])
+    if c % k:
+        raise ValueError(f"slot capacity {c} is not a multiple of k={k}")
+    spr = c // k
+    e_cap = spr + 1  # + scratch column
+    edges = np.zeros((k, e_cap, 2), dtype=np.int32)
+    mask = np.zeros((k, e_cap), dtype=np.float32)
+    edges[:, :spr, 0] = (np.asarray(slot_src) * slot_valid).reshape(k, spr)
+    edges[:, :spr, 1] = (np.asarray(slot_dst) * slot_valid).reshape(k, spr)
+    mask[:, :spr] = slot_valid.reshape(k, spr).astype(np.float32)
+    deg = np.zeros(num_vertices, dtype=np.float32)
+    np.add.at(deg, np.asarray(slot_src)[slot_valid], 1.0)
+    np.add.at(deg, np.asarray(slot_dst)[slot_valid], 1.0)
+    # Quality metrics are monitored incrementally by the orderer, not carried
+    # on the pack (same convention as ElasticRescaler's recheck=False).
+    return EngineData(
+        edges=jnp.asarray(edges),
+        mask=jnp.asarray(mask),
+        degrees=jnp.asarray(deg),
+        num_vertices=num_vertices,
+        k=k,
+        mirrors=-1,
+        replication_factor=float("nan"),
+        num_edges=int(slot_valid.sum()),
+    )
 
 
 def _axis_and_mesh(data, mesh):

@@ -1,0 +1,19 @@
+"""Streaming-graph subsystem: incremental edge ordering + on-device ingest.
+
+The paper's pipeline is preprocess-once (GEO) then rescale-forever; this
+package extends it to *evolving* graphs (the SDP / xDGP workload class in
+PAPERS.md) without giving up the O(k)-plan, Thm.-2-minimal rescale property:
+
+* ``updates``     — ``EdgeUpdateBatch`` (inserts + deletes) and a deterministic
+                    splitmix-style synthetic dynamic-graph generator.
+* ``incremental`` — host-side incremental maintenance of the GEO-ordered edge
+                    list under updates (gap-buffer / packed-memory-array slot
+                    layout, locality-best placement, bounded partial re-order).
+* ``ingest``      — on-device ingest: jitted scatter of update batches into
+                    per-partition slack slots of the (optionally mesh-sharded)
+                    engine pack, and a compact/gather program that rescales the
+                    streaming pack k→k' without leaving the mesh.
+"""
+from .updates import EdgeUpdateBatch, SyntheticStream  # noqa: F401
+from .incremental import IncrementalOrderer, StreamConfig, best_insert_position  # noqa: F401
+from .ingest import StreamingEngine, IngestStats, StreamRescaleStats  # noqa: F401

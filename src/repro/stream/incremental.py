@@ -1,0 +1,556 @@
+"""Incremental maintenance of the GEO-ordered edge list under updates.
+
+The ordered edge list (DESIGN.md §2 — the single source of truth every packed
+layout views) is held in a gap-buffer / packed-memory-array **slot array**:
+``capacity = regions · slots_per_region`` slots, each empty or holding one
+edge. Region p (== device partition p of the streaming pack) owns the
+contiguous slot range ``[p·spr, (p+1)·spr)``; the logical edge order is slot
+order restricted to occupied slots. Gaps are the per-partition slack capacity
+(DESIGN.md §9): inserting an edge fills a gap, deleting tombstones a slot, and
+neither shifts any other edge — which is what lets the device mirror apply an
+``EdgeUpdateBatch`` as a tiny scatter instead of a re-pack.
+
+Placement policy (the incremental analogue of GEO's locality greedy): a new
+edge's *target* is the median slot of its endpoints' existing edges; candidate
+regions — the median's region vs append-at-end — are scored by the exact
+Eq.-(7)-style region objective delta ``(u ∉ V_p) + (v ∉ V_p)`` maintained in
+O(1) per-region vertex counters, so locality placement never scores worse than
+appending. The free slot nearest the target is used, searched within the
+two-hop δ window reused from ``core/ordering.py`` (δ = capacity / k_max by
+default); ``best_insert_position`` is the exact ``ordering_objective`` oracle
+of the same decision, used by the property tests.
+
+Escalation ladder (DESIGN.md §9): when the monitored objective drifts past a
+threshold, ``partial_reorder`` re-runs GEO on only the degraded span of
+regions and rewrites those slots; ``full_rebuild`` re-runs ``geo_order`` on
+the whole current graph. A full ``geo_order`` re-run is the oracle the
+incremental order must stay within ``StreamConfig.rf_margin`` of
+(``rf_vs_oracle``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core import cep, metrics, ordering
+from ..core.graph import Graph
+from .updates import EdgeUpdateBatch
+
+__all__ = ["StreamConfig", "IncrementalOrderer", "SlotOp", "best_insert_position"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Tuning knobs of the incremental orderer + quality monitor."""
+
+    slack: float = 0.5  # free-slot fraction per region (gap-buffer headroom)
+    k_min: int = ordering.K_MIN_DEFAULT  # objective range for GEO re-runs
+    k_max: int = ordering.K_MAX_DEFAULT
+    delta: Optional[int] = None  # placement search window; None → capacity // k_max
+    partial_drift: float = 1.04  # normalized drift that triggers a span re-order
+    full_drift: float = 1.08  # drift that escalates to a full geo_order rebuild
+    span_regions: int = 1  # width (in regions) of a partial re-order
+    rf_margin: float = 1.10  # incremental RF must stay within this × oracle RF
+
+    def __post_init__(self):
+        if not 0.0 < self.slack:
+            raise ValueError("slack must be > 0")
+        if self.partial_drift > self.full_drift:
+            raise ValueError("partial_drift must not exceed full_drift")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotOp:
+    """One slot mutation for the device mirror. ``u, v`` are always the edge's
+    endpoints — on a tombstone (valid=False) the device writes zeros to the
+    slot but still needs the endpoints for the degree update."""
+
+    slot: int
+    u: int
+    v: int
+    valid: bool
+
+
+def best_insert_position(
+    src_o: np.ndarray,
+    dst_o: np.ndarray,
+    u: int,
+    v: int,
+    num_vertices: int,
+    k: int,
+) -> int:
+    """Exact-objective oracle of the incremental placement decision.
+
+    Candidates are the median position of (u, v)'s existing edges and
+    append-at-end; each is scored by ``ordering.ordering_objective`` with
+    ``k_min = k_max = k`` on the list-with-insertion. Returns the best
+    insertion index (ties → the median, i.e. locality wins). By construction
+    the returned position's objective is never worse than append-at-end —
+    the invariant the production O(1) region-counter placement approximates.
+    Tiny lists only (each candidate costs a full objective evaluation).
+    """
+    src_o = np.asarray(src_o, dtype=np.int64)
+    dst_o = np.asarray(dst_o, dtype=np.int64)
+    n = src_o.shape[0]
+    hits = np.flatnonzero((src_o == u) | (dst_o == u) | (src_o == v) | (dst_o == v))
+    candidates = [int(n)]  # append-at-end is always a candidate
+    if hits.size:
+        candidates.insert(0, int(hits[hits.size // 2]))
+
+    def objective(pos: int) -> float:
+        s = np.insert(src_o, pos, min(u, v))
+        d = np.insert(dst_o, pos, max(u, v))
+        return ordering.ordering_objective(s, d, n + 1, num_vertices, k, k)
+
+    scores = [objective(p) for p in candidates]
+    return candidates[int(np.argmin(scores))]  # argmin keeps first on ties
+
+
+class IncrementalOrderer:
+    """Maintains the ordered edge list in a region-sliced slot array.
+
+    The slot array is the host source of truth the device streaming pack
+    mirrors slot-for-slot (``ingest.StreamingEngine``); ``drain_ops`` hands
+    the engine exactly the slots each ``apply`` touched.
+    """
+
+    def __init__(
+        self,
+        src_ordered: np.ndarray,
+        dst_ordered: np.ndarray,
+        num_vertices: int,
+        *,
+        regions: int,
+        config: StreamConfig = StreamConfig(),
+    ):
+        if regions < 1:
+            raise ValueError("regions must be >= 1")
+        self.num_vertices = int(num_vertices)
+        self.config = config
+        self.needs_resync = False  # set by re-layouts; cleared by the engine
+        self._ops: dict[int, SlotOp] = {}
+        self._deg_delta: dict[int, int] = {}  # vertex → degree change since drain
+        self._layout(
+            np.asarray(src_ordered, dtype=np.int64),
+            np.asarray(dst_ordered, dtype=np.int64),
+            regions,
+        )
+        self._set_baseline()
+
+    # ------------------------------------------------------------ properties
+    @property
+    def regions(self) -> int:
+        return self._regions
+
+    @property
+    def slots_per_region(self) -> int:
+        return self._spr
+
+    @property
+    def capacity(self) -> int:
+        return self._regions * self._spr
+
+    @property
+    def num_edges(self) -> int:
+        return len(self._edge2slot)
+
+    @property
+    def delta(self) -> int:
+        if self.config.delta is not None:
+            return int(self.config.delta)
+        return max(1, self.capacity // self.config.k_max)
+
+    # ---------------------------------------------------------------- layout
+    def _layout(self, src_o: np.ndarray, dst_o: np.ndarray, regions: int, spr: Optional[int] = None) -> None:
+        """(Re)build the slot array from an ordered list: CEP chunk at
+        k=regions, each chunk's edges spread evenly over its region's slots so
+        gaps are interleaved (PMA style) and early inserts never shift."""
+        e = int(src_o.shape[0])
+        if spr is None:
+            spr = max(2, int(np.ceil(e * (1.0 + self.config.slack) / regions)))
+        self._regions = int(regions)
+        self._spr = int(spr)
+        c = self.capacity
+        self.slot_src = np.zeros(c, dtype=np.int64)
+        self.slot_dst = np.zeros(c, dtype=np.int64)
+        self.slot_valid = np.zeros(c, dtype=bool)
+        self._edge2slot: dict[tuple[int, int], int] = {}
+        self._incident: dict[int, set] = {}
+        self._rc: list[dict[int, int]] = [dict() for _ in range(regions)]
+        self._free = np.full(regions, self._spr, dtype=np.int64)  # free slots/region
+        self._gather_from = None  # new slot ← old slot; only relayout builds it
+        bounds = cep.chunk_bounds(e, regions)
+        for p in range(regions):
+            lo, hi = int(bounds[p]), int(bounds[p + 1])
+            n_p = hi - lo
+            if n_p > self._spr:
+                raise ValueError(
+                    f"region {p} chunk ({n_p} edges) exceeds slots_per_region={self._spr}"
+                )
+            if n_p == 0:
+                continue
+            cols = (np.arange(n_p, dtype=np.int64) * self._spr) // n_p
+            slots = p * self._spr + cols
+            self.slot_src[slots] = src_o[lo:hi]
+            self.slot_dst[slots] = dst_o[lo:hi]
+            self.slot_valid[slots] = True
+            self._free[p] -= n_p
+            for s_, a, b in zip(slots.tolist(), src_o[lo:hi].tolist(), dst_o[lo:hi].tolist()):
+                self._edge2slot[(a, b)] = s_
+                self._incident.setdefault(a, set()).add(s_)
+                self._incident.setdefault(b, set()).add(s_)
+                self._count(p, a, +1)
+                self._count(p, b, +1)
+
+    def _set_baseline(self) -> None:
+        """Record the current normalized objective as 'fresh-GEO quality'.
+
+        Called at construction and after full rebuilds ONLY: partial reorders
+        and re-layouts must not move the yardstick, or gradual degradation
+        hides behind repeated rebaselining."""
+        self._baseline_kappa = self._kappa()
+
+    def _kappa(self) -> float:
+        """Σ_p |V(region_p)| normalized by the Thm.-6-style capacity
+        |V| + |E| + k, which makes the signal comparable across graph growth
+        and region-count changes (both Σ|V_p| and the bound scale with them)."""
+        return self.region_vertex_sum() / max(1, self.num_vertices + self.num_edges + self._regions)
+
+    # -------------------------------------------------------------- counters
+    def _count(self, region: int, vertex: int, d: int) -> None:
+        rc = self._rc[region]
+        n = rc.get(vertex, 0) + d
+        if n <= 0:
+            rc.pop(vertex, None)
+        else:
+            rc[vertex] = n
+
+    def region_vertex_sum(self) -> int:
+        """Σ_p |V(region_p)| — the monitored Eq.-(7)-style objective (equal to
+        ``ordering_objective·|V|`` at k=regions when region fills are equal)."""
+        return int(sum(len(rc) for rc in self._rc))
+
+    def drift(self) -> float:
+        """Normalized objective now vs at the last full-quality order (init or
+        full rebuild): the quality monitor's escalation signal. 1.0 = as good
+        as fresh GEO; growth alone is not drift (see ``_kappa``)."""
+        return self._kappa() / max(self._baseline_kappa, 1e-12)
+
+    # ----------------------------------------------------------------- apply
+    def apply(self, batch: EdgeUpdateBatch) -> dict:
+        """Apply one update batch to the slot array. Returns counts
+        {inserted, deleted, skipped}. Deletes run first so a batch that
+        replaces edges reuses the freed slots. Device-mirror ops accumulate in
+        ``drain_ops`` order-insensitively (last write per slot wins)."""
+        inserted = deleted = skipped = 0
+        for u, v in batch.delete.tolist():
+            if self._delete(int(u), int(v)):
+                deleted += 1
+            else:
+                skipped += 1
+        for u, v in batch.insert.tolist():
+            r = self._insert(int(u), int(v))
+            if r is None:
+                skipped += 1
+            else:
+                inserted += 1
+        return {"inserted": inserted, "deleted": deleted, "skipped": skipped}
+
+    def _delete(self, u: int, v: int) -> bool:
+        s = self._edge2slot.pop((u, v), None)
+        if s is None:
+            return False
+        region = s // self._spr
+        self.slot_valid[s] = False
+        self.slot_src[s] = 0
+        self.slot_dst[s] = 0
+        self._free[region] += 1
+        for w in (u, v):
+            inc = self._incident.get(w)
+            if inc is not None:
+                inc.discard(s)
+                if not inc:
+                    del self._incident[w]
+            self._count(region, w, -1)
+            self._deg_delta[w] = self._deg_delta.get(w, 0) - 1
+        self._ops[s] = SlotOp(s, u, v, False)
+        return True
+
+    def _insert(self, u: int, v: int) -> Optional[int]:
+        if u == v:
+            return None
+        u, v = (u, v) if u < v else (v, u)
+        if (u, v) in self._edge2slot:
+            return None
+        if u < 0 or v >= self.num_vertices:
+            # Negative ids would silently wrap in both host np.add.at and the
+            # device scatter, crediting some other vertex's degree.
+            raise ValueError(f"edge ({u}, {v}) out of range (|V|={self.num_vertices})")
+        slot = self._place(u, v)
+        if slot is None:
+            # All regions full: grow the slot array in place (same order,
+            # bigger gaps) and retry — the engine re-uploads on resync.
+            self.grow()
+            slot = self._place(u, v)
+            assert slot is not None
+        region = slot // self._spr
+        self.slot_src[slot] = u
+        self.slot_dst[slot] = v
+        self.slot_valid[slot] = True
+        self._free[region] -= 1
+        self._edge2slot[(u, v)] = slot
+        self._incident.setdefault(u, set()).add(slot)
+        self._incident.setdefault(v, set()).add(slot)
+        self._count(region, u, +1)
+        self._count(region, v, +1)
+        self._deg_delta[u] = self._deg_delta.get(u, 0) + 1
+        self._deg_delta[v] = self._deg_delta.get(v, 0) + 1
+        self._ops[slot] = SlotOp(slot, u, v, True)
+        return slot
+
+    def _place(self, u: int, v: int) -> Optional[int]:
+        """Locality-best free slot for (u, v) — see module docstring."""
+        inc = sorted(self._incident.get(u, set()) | self._incident.get(v, set()))
+        target = inc[len(inc) // 2] if inc else None
+        candidates: list[int] = []
+        if target is not None:
+            candidates.append(target // self._spr)
+        append_region = self._append_region()
+        if append_region is not None and append_region not in candidates:
+            candidates.append(append_region)
+        candidates = [r for r in candidates if self._free[r] > 0]
+        if not candidates:
+            return self._any_free_slot(target)
+        # Exact region-objective delta: +1 per endpoint the region hasn't seen.
+        # min() keeps the FIRST best — the median region — on ties, so
+        # locality placement never scores worse than append-at-end.
+        best = min(candidates, key=lambda r: (u not in self._rc[r]) + (v not in self._rc[r]))
+        want = target if (target is not None and target // self._spr == best) else best * self._spr
+        slot = self._free_in(best, near=want)
+        if target is not None and slot is not None and abs(slot - target) > self.delta and best != append_region:
+            # The δ window around the locality target is saturated: the edge
+            # would land far from its neighbors anyway, so fall back to append.
+            alt = self._free_in(append_region) if append_region is not None else None
+            if alt is not None:
+                return alt
+        return slot
+
+    def _append_region(self) -> Optional[int]:
+        """Region of the append-at-end position: the last region with a free
+        slot (append-at-end of the occupied prefix). O(k) via the per-region
+        free counts — no occupancy rescans on the insert hot path."""
+        for r in range(self._regions - 1, -1, -1):
+            if self._free[r] > 0:
+                return r
+        return None
+
+    def _free_in(self, region: int, near: Optional[int] = None) -> Optional[int]:
+        lo = region * self._spr
+        free = np.flatnonzero(~self.slot_valid[lo : lo + self._spr])
+        if free.size == 0:
+            return None
+        if near is None:
+            return int(lo + free[0])
+        return int(lo + free[np.argmin(np.abs(free + lo - near))])
+
+    def _any_free_slot(self, near: Optional[int]) -> Optional[int]:
+        free = np.flatnonzero(~self.slot_valid)
+        if free.size == 0:
+            return None
+        if near is None:
+            return int(free[0])
+        return int(free[np.argmin(np.abs(free - near))])
+
+    # ------------------------------------------------------------ device ops
+    def drain_ops(self) -> tuple[list[SlotOp], dict[int, int]]:
+        """(slot mutations, per-vertex degree deltas) since the last drain.
+        Slot ops are coalesced (last write per slot wins — safe because degree
+        deltas are accumulated separately, so a delete+reinsert into the same
+        slot still nets the right degrees). Meaningless after a re-layout —
+        check ``needs_resync`` first."""
+        ops = list(self._ops.values())
+        deg = dict(self._deg_delta)
+        self._ops.clear()
+        self._deg_delta.clear()
+        return ops, deg
+
+    def drain_gather_map(self) -> np.ndarray:
+        """(capacity,) int64: for each slot of the CURRENT layout, the slot of
+        the previous layout it was filled from (-1 = empty). Only ``relayout``
+        (the rescale path) produces one — the on-device compact program turns
+        it into a single gather; grow / full_rebuild resync instead."""
+        if self._gather_from is None:
+            raise ValueError("no gather map: only relayout() produces one")
+        gm, self._gather_from = self._gather_from, None
+        return gm
+
+    # ------------------------------------------------------------- snapshots
+    def snapshot(self) -> tuple[np.ndarray, np.ndarray]:
+        """The flat ordered (src, dst) lists — occupied slots in slot order."""
+        vs = self.slot_valid
+        return self.slot_src[vs].copy(), self.slot_dst[vs].copy()
+
+    def graph(self) -> Graph:
+        src, dst = self.snapshot()
+        return Graph.from_edges(np.stack([src, dst], axis=1), self.num_vertices)
+
+    def rf(self, k: int) -> float:
+        """Replication factor of CEP chunks over the current incremental order."""
+        src, dst = self.snapshot()
+        return metrics.replication_factor_ordered(src, dst, k, self.num_vertices)
+
+    def rf_vs_oracle(self, k: int, seed: int = 0) -> tuple[float, float]:
+        """(incremental RF, full geo_order re-run RF) at k — the margin the
+        incremental order must stay within (config.rf_margin)."""
+        g = self.graph()
+        order = ordering.geo_order(g, self.config.k_min, self.config.k_max, seed=seed)
+        oracle = metrics.replication_factor_ordered(
+            g.src[order], g.dst[order], k, self.num_vertices
+        )
+        return self.rf(k), oracle
+
+    # ------------------------------------------------------------ escalation
+    def maybe_escalate(self) -> str:
+        """Quality-monitor step: 'none' | 'partial' | 'full' (what ran)."""
+        d = self.drift()
+        if d > self.config.full_drift:
+            self.full_rebuild()
+            return "full"
+        if d > self.config.partial_drift:
+            self.partial_reorder()
+            return "partial"
+        return "none"
+
+    def worst_region(self) -> int:
+        """Region with the highest vertex count per occupied slot — the most
+        locality-degraded span start."""
+        scores = []
+        for r in range(self._regions):
+            lo = r * self._spr
+            fill = int(self.slot_valid[lo : lo + self._spr].sum())
+            scores.append(len(self._rc[r]) / max(1, fill))
+        return int(np.argmax(scores))
+
+    def partial_reorder(self, region: Optional[int] = None) -> int:
+        """Bounded re-order of only the degraded span: GEO on the subgraph
+        induced by ``span_regions`` consecutive regions' edges, spliced back
+        into the same slots. Returns the number of edges re-ordered. The
+        rewrite is emitted as ordinary slot ops (one op per span slot), so the
+        device mirror follows with the same scatter program ingest uses — no
+        full re-upload; degrees are untouched (a re-order never changes the
+        graph)."""
+        w = self.worst_region() if region is None else int(region)
+        span = self.config.span_regions
+        r0 = max(0, min(w, self._regions - span))
+        r1 = min(self._regions, r0 + span)
+        lo, hi = r0 * self._spr, r1 * self._spr
+        slots = lo + np.flatnonzero(self.slot_valid[lo:hi])
+        if slots.size < 2:
+            return 0
+        src_s = self.slot_src[slots]
+        dst_s = self.slot_dst[slots]
+        sub = Graph.from_edges(np.stack([src_s, dst_s], axis=1), self.num_vertices)
+        sub_order = ordering.geo_order(sub, self.config.k_min, self.config.k_max, seed=0)
+        new_src = sub.src[sub_order].astype(np.int64)
+        new_dst = sub.dst[sub_order].astype(np.int64)
+        # Splice: rewrite the span's regions with the re-ordered edges spread
+        # evenly, leave everything outside [lo, hi) untouched.
+        self._rewrite_span(r0, r1, new_src, new_dst)
+        for s_ in range(lo, hi):
+            self._ops[s_] = SlotOp(
+                s_, int(self.slot_src[s_]), int(self.slot_dst[s_]), bool(self.slot_valid[s_])
+            )
+        return int(slots.size)
+
+    def _rewrite_span(self, r0: int, r1: int, src_o: np.ndarray, dst_o: np.ndarray) -> None:
+        spr = self._spr
+        lo, hi = r0 * spr, r1 * spr
+        # Clear span bookkeeping.
+        old_slots = lo + np.flatnonzero(self.slot_valid[lo:hi])
+        for s_ in old_slots.tolist():
+            a, b = int(self.slot_src[s_]), int(self.slot_dst[s_])
+            region = s_ // spr
+            del self._edge2slot[(a, b)]
+            for w in (a, b):
+                inc = self._incident.get(w)
+                if inc is not None:
+                    inc.discard(s_)
+                    if not inc:
+                        del self._incident[w]
+                self._count(region, w, -1)
+        self.slot_valid[lo:hi] = False
+        self.slot_src[lo:hi] = 0
+        self.slot_dst[lo:hi] = 0
+        self._free[r0:r1] = spr
+        # Re-fill: CEP chunks of the span order over the span regions.
+        e = int(src_o.shape[0])
+        bounds = cep.chunk_bounds(e, r1 - r0)
+        for p in range(r1 - r0):
+            clo, chi = int(bounds[p]), int(bounds[p + 1])
+            n_p = chi - clo
+            if n_p == 0:
+                continue
+            cols = (np.arange(n_p, dtype=np.int64) * spr) // n_p
+            slots = (r0 + p) * spr + cols
+            self.slot_src[slots] = src_o[clo:chi]
+            self.slot_dst[slots] = dst_o[clo:chi]
+            self.slot_valid[slots] = True
+            self._free[r0 + p] -= n_p
+            for s_, a, b in zip(slots.tolist(), src_o[clo:chi].tolist(), dst_o[clo:chi].tolist()):
+                self._edge2slot[(a, b)] = s_
+                self._incident.setdefault(a, set()).add(s_)
+                self._incident.setdefault(b, set()).add(s_)
+                self._count(r0 + p, a, +1)
+                self._count(r0 + p, b, +1)
+
+    def full_rebuild(self, seed: int = 0) -> None:
+        """Escalation terminal: re-run geo_order on the current graph and
+        re-layout every slot. Sets ``needs_resync``."""
+        g = self.graph()
+        order = ordering.geo_order(g, self.config.k_min, self.config.k_max, seed=seed)
+        self._layout(g.src[order].astype(np.int64), g.dst[order].astype(np.int64), self._regions)
+        self._finish_relayout()
+        self._set_baseline()  # a fresh GEO order IS the new quality yardstick
+
+    def relayout(self, regions: int) -> None:
+        """Re-slice the CURRENT incremental order into ``regions`` regions
+        (rescale k→k' under ingest: order unchanged, slots re-chunked). Sets
+        ``needs_resync``; ``drain_gather_map`` feeds the on-device compact."""
+        d = self.drift()  # Σ|V_p| scales with the region count, so carry the
+        src_o, dst_o = self.snapshot()  # drift VALUE across the k change
+        old_slot = self._slot_of_edges(src_o, dst_o)
+        self._layout(src_o, dst_o, int(regions))
+        self._map_gather(old_slot, src_o, dst_o)
+        self._finish_relayout()
+        self._baseline_kappa = self._kappa() / max(d, 1e-12)
+
+    def grow(self, factor: float = 2.0) -> None:
+        """Enlarge slots_per_region (same region count, same order, bigger
+        gaps) when the array runs out of free slots. Sets ``needs_resync``."""
+        d = self.drift()
+        src_o, dst_o = self.snapshot()
+        spr = max(self._spr + 1, int(np.ceil(self._spr * factor)))
+        self._layout(src_o, dst_o, self._regions, spr=spr)
+        self._finish_relayout()
+        self._baseline_kappa = self._kappa() / max(d, 1e-12)
+
+    def _slot_of_edges(self, src_o: np.ndarray, dst_o: np.ndarray) -> dict:
+        return {
+            (int(a), int(b)): self._edge2slot[(int(a), int(b))]
+            for a, b in zip(src_o.tolist(), dst_o.tolist())
+        }
+
+    def _map_gather(self, old_slot: dict, src_o: np.ndarray, dst_o: np.ndarray) -> None:
+        gm = np.full(self.capacity, -1, dtype=np.int64)
+        occupied = np.flatnonzero(self.slot_valid)
+        for s_ in occupied.tolist():
+            key = (int(self.slot_src[s_]), int(self.slot_dst[s_]))
+            gm[s_] = old_slot[key]
+        self._gather_from = gm
+
+    def _finish_relayout(self) -> None:
+        self._ops.clear()
+        self._deg_delta.clear()
+        self.needs_resync = True

@@ -1,0 +1,377 @@
+"""On-device ingest: apply EdgeUpdateBatches to the (sharded) engine pack.
+
+The host ``IncrementalOrderer`` owns the ordered slot array; the
+``StreamingEngine`` mirrors it on the mesh as a ``ShardedEngineData`` whose
+partition p holds region p's slots (``graphs/engine.py pack_slots`` layout:
+occupied slots keep their column, gaps are masked, one trailing scratch
+column). Two jitted device programs — cached in the same bounded
+``ProgramCache`` LRU as the migration programs of elastic/rescale_exec.py —
+keep the mirror current without ever re-packing from the host:
+
+* **scatter** (ingest): each drained ``SlotOp`` becomes one (row, col) write
+  of the edge values + mask bit, plus a scatter-add of the per-vertex degree
+  deltas into the replicated degree vector. Ops are padded to a power-of-two
+  batch capacity; padding targets the scratch column, which the program
+  re-zeroes, so one traced program serves every batch of similar size.
+* **compact** (rescale-under-ingest): the orderer's re-layout gather map
+  (new slot ← old slot) becomes one gather over the old buffers with the
+  k_new output sharding — XLA's SPMD partitioner routes exactly the rows
+  whose region changed devices as device-to-device transfers, so rescaling
+  keeps its O(k)-plan character while the stream is live.
+
+Bit-identity contract (DESIGN.md §9): after any sequence of ingests and
+rescales, ``unshard_engine_data(engine.data)`` equals the host-side
+``pack_slots`` oracle byte-for-byte (``verify_bit_identity``; asserted per
+step with ``verify=True``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compat import donate_jit
+from ..core import cep
+from ..elastic.rescale_exec import EDGE_BYTES, ProgramCache
+from ..graphs import engine as graph_engine
+from ..launch import sharding as SH
+from .incremental import IncrementalOrderer
+from .updates import EdgeUpdateBatch
+
+__all__ = ["IngestStats", "StreamRescaleStats", "StreamingEngine"]
+
+_MIN_OP_CAPACITY = 32
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def _rows_of_regions(regions: np.ndarray, k: int, g: int) -> np.ndarray:
+    """Vectorized launch.sharding.partition_row."""
+    m = SH.padded_partition_count(k, g) // g
+    return (regions % g) * m + regions // g
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestStats:
+    inserted: int  # edges added to the graph
+    deleted: int  # edges removed
+    skipped: int  # duplicate inserts / deletes of absent edges (idempotent)
+    scatter_ops: int  # slot writes in the device scatter (0 when resynced)
+    resynced: bool  # True when the slot array re-laid out (grow/escalation)
+    elapsed_s: float  # host apply + device program, blocked
+    num_edges: int  # live edges after the batch
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamRescaleStats:
+    k_old: int
+    k_new: int
+    num_edges: int
+    moved_edges: int  # edges whose owning region changed (actual)
+    cep_plan_edges: int  # what CEP-chunk layouts would move for this |E|, k_old → k_new
+    cross_device_edges: int  # moved edges whose regions live on different devices
+    cross_device_bytes: int
+    elapsed_s: float
+
+
+class StreamingEngine:
+    """Keeps a mesh-resident engine pack in lock-step with an
+    ``IncrementalOrderer`` under streaming updates and rescales.
+
+    ``engine.data`` is always a live ``ShardedEngineData``: GAS algorithms
+    (pagerank / sssp / wcc) run on it unchanged between — and across —
+    ingests, because the slot layout is mask-driven. A mesh of 1
+    (``launch.mesh.make_graph_mesh(1)``) is the degenerate case of the same
+    code path, per the repo's graph-axis convention.
+    """
+
+    def __init__(
+        self,
+        orderer: IncrementalOrderer,
+        mesh=None,
+        *,
+        donate: bool = True,
+        program_cache_size: int = 8,
+        scatter_limit: int = 1024,
+    ):
+        if mesh is None:
+            from ..launch import mesh as MM
+
+            mesh = MM.make_graph_mesh(1)
+        self.orderer = orderer
+        self.mesh = mesh
+        self.donate = donate
+        # Above this many slot ops (a partial re-order's span rewrite), a full
+        # pack re-upload beats a giant scatter — on CPU meshes markedly so.
+        # Real accelerator meshes, where host→device uploads cross PCIe while
+        # the scatter stays device-local, should raise it.
+        self.scatter_limit = int(scatter_limit)
+        self._scatter_programs = ProgramCache(program_cache_size)
+        self._compact_programs = ProgramCache(program_cache_size)
+        self.data = self._upload()
+        orderer.needs_resync = False
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def k(self) -> int:
+        return self.orderer.regions
+
+    @property
+    def num_vertices(self) -> int:
+        return self.orderer.num_vertices
+
+    def oracle_pack(self) -> graph_engine.EngineData:
+        """Host-side bit-identity oracle: pack_slots of the current host
+        slot array (what the device buffers must equal after unshard)."""
+        o = self.orderer
+        return graph_engine.pack_slots(
+            o.slot_src, o.slot_dst, o.slot_valid, o.regions, o.num_vertices
+        )
+
+    def _upload(self) -> graph_engine.ShardedEngineData:
+        return graph_engine.shard_engine_data(self.oracle_pack(), self.mesh)
+
+    def _resync(self) -> None:
+        """Full host re-upload after a slot re-layout (grow / full rebuild).
+        Rare by design — the escalation ladder's upper rungs."""
+        self.orderer.drain_ops()  # ops predate the re-layout; drop them
+        self.data = self._upload()
+        self.orderer.needs_resync = False
+
+    def _sync_pending(self) -> None:
+        """Bring the device mirror up to date with whatever the host orderer
+        has applied since the last sync: resync after a re-layout, otherwise
+        scatter the drained ops (re-upload beyond ``scatter_limit``)."""
+        if self.orderer.needs_resync:
+            self._resync()
+            return
+        ops, deg = self.orderer.drain_ops()
+        if len(ops) > self.scatter_limit:
+            self.data = self._upload()
+        elif ops or deg:
+            self._scatter(ops, deg)
+
+    def verify_bit_identity(self) -> bool:
+        got = graph_engine.unshard_engine_data(self.data)
+        want = self.oracle_pack()
+        if not (
+            np.array_equal(np.asarray(got.edges), np.asarray(want.edges))
+            and np.array_equal(np.asarray(got.mask), np.asarray(want.mask))
+            and np.array_equal(np.asarray(got.degrees), np.asarray(want.degrees))
+        ):
+            raise AssertionError("sharded streaming pack diverged from the host slot oracle")
+        return True
+
+    # --------------------------------------------------------------- ingest
+    def ingest(self, batch: EdgeUpdateBatch, *, verify: bool = False) -> IngestStats:
+        """Apply one update batch: host slot placement, then the device
+        scatter (or a resync when the batch forced a re-layout)."""
+        t0 = time.perf_counter()
+        counts = self.orderer.apply(batch)
+        resynced = False
+        n_ops = 0
+        if self.orderer.needs_resync:
+            self._resync()
+            resynced = True
+        else:
+            ops, deg = self.orderer.drain_ops()
+            n_ops = len(ops)
+            if n_ops or deg:
+                self._scatter(ops, deg)
+        jax.block_until_ready(self.data.edges)
+        elapsed = time.perf_counter() - t0
+        if verify:
+            self.verify_bit_identity()
+        return IngestStats(
+            inserted=counts["inserted"],
+            deleted=counts["deleted"],
+            skipped=counts["skipped"],
+            scatter_ops=n_ops,
+            resynced=resynced,
+            elapsed_s=elapsed,
+            num_edges=self.orderer.num_edges,
+        )
+
+    def _scatter(self, ops, deg: dict) -> None:
+        o = self.orderer
+        g = SH.graph_axis_size(self.mesh)
+        k_pad = self.data.k_pad
+        e_cap = int(self.data.edges.shape[1])  # slots_per_region + scratch
+        cap = _next_pow2(max(len(ops), (len(deg) + 1) // 2, _MIN_OP_CAPACITY))
+        # Padding ops target the scratch column (always re-zeroed by the
+        # program), so no real slot is ever clobbered by a no-op.
+        rows = np.zeros(cap, dtype=np.int32)
+        cols = np.full(cap, e_cap - 1, dtype=np.int32)
+        vals = np.zeros((cap, 2), dtype=np.int32)
+        mvals = np.zeros(cap, dtype=np.float32)
+        for i, op in enumerate(ops):
+            rows[i] = SH.partition_row(op.slot // o.slots_per_region, o.regions, g)
+            cols[i] = op.slot % o.slots_per_region
+            if op.valid:
+                vals[i] = (op.u, op.v)
+                mvals[i] = 1.0
+        verts = np.zeros(2 * cap, dtype=np.int32)
+        dvals = np.zeros(2 * cap, dtype=np.float32)
+        for i, (v, d) in enumerate(sorted(deg.items())):
+            verts[i] = v
+            dvals[i] = float(d)
+        program = self._scatter_program(k_pad, e_cap, cap, self.mesh)
+        edges, mask, degrees = program(
+            self.data.edges,
+            self.data.mask,
+            self.data.degrees,
+            jnp.asarray(rows),
+            jnp.asarray(cols),
+            jnp.asarray(vals),
+            jnp.asarray(mvals),
+            jnp.asarray(verts),
+            jnp.asarray(dvals),
+        )
+        self.data = dataclasses.replace(
+            self.data,
+            edges=edges,
+            mask=mask,
+            degrees=degrees,
+            num_edges=o.num_edges,
+        )
+
+    def _scatter_program(self, k_pad: int, e_cap: int, cap: int, mesh):
+        key = ("scatter", k_pad, e_cap, cap, mesh)
+        cached = self._scatter_programs.get(key)
+        if cached is not None:
+            return cached
+
+        def apply(edges, mask, degrees, rows, cols, vals, mvals, verts, dvals):
+            edges = edges.at[rows, cols].set(vals)
+            mask = mask.at[rows, cols].set(mvals)
+            degrees = degrees.at[verts].add(dvals)
+            # The scratch column absorbs padded no-op writes; keep it zero so
+            # the pack stays bit-identical to the host oracle.
+            edges = edges.at[:, -1, :].set(0)
+            mask = mask.at[:, -1].set(0.0)
+            return edges, mask, degrees
+
+        s_edges, s_mask, s_vert = SH.engine_shardings(mesh)
+        jit_kwargs = {"out_shardings": (s_edges, s_mask, s_vert)}
+        if self.donate:
+            program = donate_jit(apply, donate_argnums=(0, 1, 2), **jit_kwargs)
+        else:
+            program = jax.jit(apply, **jit_kwargs)
+        return self._scatter_programs.put(key, program)
+
+    # -------------------------------------------------------------- rescale
+    def rescale(self, k_new: int, *, verify: bool = False) -> StreamRescaleStats:
+        """Re-slice the live stream to ``k_new`` partitions without leaving
+        the mesh: the orderer re-chunks the current incremental order (CEP at
+        k_new) and the gather map executes as one compact program."""
+        t0 = time.perf_counter()
+        o = self.orderer
+        # The host may have applied updates since the last device sync (e.g.
+        # orderer.apply called directly): flush them first — the gather map
+        # below describes the post-flush layout, and relayout drops pending
+        # ops.
+        self._sync_pending()
+        g = SH.graph_axis_size(self.mesh)
+        k_old, spr_old = o.regions, o.slots_per_region
+        old_edges = self.data.edges
+        o.relayout(int(k_new))
+        gm = o.drain_gather_map()
+        spr_new = o.slots_per_region
+        e_cap_old = int(old_edges.shape[1])
+        e_cap_new = spr_new + 1
+        k_pad_new = SH.padded_partition_count(int(k_new), g)
+
+        new_slots = np.flatnonzero(gm >= 0)
+        old_slots = gm[new_slots]
+        new_regions = new_slots // spr_new
+        old_regions = old_slots // spr_old
+        src_row = np.zeros((k_pad_new, e_cap_new), dtype=np.int32)
+        src_col = np.zeros((k_pad_new, e_cap_new), dtype=np.int32)
+        validf = np.zeros((k_pad_new, e_cap_new), dtype=np.float32)
+        dst_rows = _rows_of_regions(new_regions, int(k_new), g)
+        dst_cols = new_slots % spr_new
+        src_row[dst_rows, dst_cols] = _rows_of_regions(old_regions, k_old, g)
+        src_col[dst_rows, dst_cols] = old_slots % spr_old
+        validf[dst_rows, dst_cols] = 1.0
+
+        moved = int(np.count_nonzero(new_regions != old_regions))
+        cross = int(
+            np.count_nonzero(
+                (new_regions != old_regions) & (new_regions % g != old_regions % g)
+            )
+        )
+        program = self._compact_program(
+            (int(old_edges.shape[0]), e_cap_old, k_pad_new, e_cap_new, self.mesh)
+        )
+        edges, mask = program(
+            old_edges, jnp.asarray(src_row), jnp.asarray(src_col), jnp.asarray(validf)
+        )
+        self.data = graph_engine.ShardedEngineData(
+            edges=edges,
+            mask=mask,
+            degrees=self.data.degrees,  # same graph, degrees unchanged
+            num_vertices=self.num_vertices,
+            k=int(k_new),
+            mesh=self.mesh,
+            mirrors=-1,
+            replication_factor=float("nan"),
+            num_edges=o.num_edges,
+        )
+        o.needs_resync = False
+        jax.block_until_ready(self.data.edges)
+        elapsed = time.perf_counter() - t0
+        if verify:
+            self.verify_bit_identity()
+        return StreamRescaleStats(
+            k_old=k_old,
+            k_new=int(k_new),
+            num_edges=o.num_edges,
+            moved_edges=moved,
+            cep_plan_edges=cep.migrated_edges_exact(o.num_edges, k_old, int(k_new)),
+            cross_device_edges=cross,
+            cross_device_bytes=cross * EDGE_BYTES,
+            elapsed_s=elapsed,
+        )
+
+    def _compact_program(self, key):
+        cached = self._compact_programs.get(("compact",) + key)
+        if cached is not None:
+            return cached
+        mesh = key[-1]
+
+        def compact(edges_old, src_row, src_col, validf):
+            gathered = edges_old[src_row, src_col]  # (k_pad_new, e_cap_new, 2)
+            new_edges = gathered * validf[..., None].astype(gathered.dtype)
+            return new_edges, validf
+
+        s_edges, s_mask, _ = SH.engine_shardings(mesh)
+        jit_kwargs = {"out_shardings": (s_edges, s_mask)}
+        if self.donate:
+            program = donate_jit(compact, donate_argnums=(0,), **jit_kwargs)
+        else:
+            program = jax.jit(compact, **jit_kwargs)
+        return self._compact_programs.put(("compact",) + key, program)
+
+    # ------------------------------------------------------------ escalation
+    def monitor(self) -> str:
+        """Quality-monitor step of the escalation ladder: lets the orderer
+        escalate and brings the device mirror along — a partial span re-order
+        arrives as ordinary slot ops (one scatter), a full rebuild as a
+        resync. Returns 'none' | 'partial' | 'full'."""
+        escalation = self.orderer.maybe_escalate()
+        self._sync_pending()
+        return escalation
+
+    def rf_vs_oracle(self, k: Optional[int] = None) -> tuple[float, float]:
+        """(incremental RF, full geo_order re-run RF) at k (default: current
+        partition count) — the acceptance margin check."""
+        return self.orderer.rf_vs_oracle(self.k if k is None else int(k))

@@ -180,6 +180,50 @@ def test_sharded_rescale_acceptance_8dev():
     """)
 
 
+def test_sharded_stream_ingest_acceptance_8dev():
+    """Streaming acceptance inside tier-1: on 8 forced host devices, on-device
+    ingest + two rescales-under-ingest stay bit-identical to the host slot
+    oracle, and ingest+scale events share one monotonic seq. Full coverage
+    lives in tests/test_stream_sharded.py (CI multidevice job)."""
+    run_with_devices("""
+        import numpy as np
+        from repro.core import ordering
+        from repro.core.graph import rmat_graph
+        from repro.elastic import controller as ec
+        from repro.launch import mesh as MM
+        from repro.stream import IncrementalOrderer, StreamingEngine, SyntheticStream
+
+        g = rmat_graph(8, 6, seed=0)
+        order = ordering.geo_order(g, seed=0)
+        src, dst = g.src[order].astype(np.int64), g.dst[order].astype(np.int64)
+        o = IncrementalOrderer(src, dst, g.num_vertices, regions=8)
+        eng = StreamingEngine(o, MM.make_graph_mesh(8))
+        t = [0.0]
+        ctl = ec.ElasticController(8, dead_after_s=5.0, clock=lambda: t[0])
+        ctl.attach_stream(eng)
+        stream = SyntheticStream(g, batch_size=64, seed=1)
+
+        ctl.ingest(stream.batch())
+        ev_up = ctl.add_hosts(4)          # k → k+x under ingest
+        assert ev_up.executed and eng.k == 12
+        eng.verify_bit_identity()
+        ctl.ingest(stream.batch())
+        t[0] = 1.0
+        for h in range(7):
+            ctl.heartbeat(h, 1)
+        t[0] = 6.0
+        ev_down = ctl.poll()              # k → k−y (5 silent hosts preempted)
+        assert ev_down is not None and ev_down.executed and eng.k == 7
+        ctl.ingest(stream.batch())
+        eng.verify_bit_identity()
+        inc, oracle = eng.rf_vs_oracle()
+        assert inc <= oracle * o.config.rf_margin + 1e-9, (inc, oracle)
+        seqs = [e.seq for e in ctl.events]
+        assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+        print("SHARDED-STREAM-OK")
+    """)
+
+
 def test_production_mesh_shapes():
     run_with_devices("""
         import os

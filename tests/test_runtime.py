@@ -89,6 +89,26 @@ def test_controller_detects_preemption_and_straggler():
     assert ev2 and ev2.kind == "straggler" and 2 in ev2.lost_hosts
     ev3 = ctl.add_hosts(2)
     assert ev3.kind == "scale_out" and ctl.k == 4
+    # Interleaved event logs are ordered by one monotonic seq (frozen events
+    # can't rely on wall-clock: the test clock above never moves during polls).
+    assert (ev.seq, ev2.seq, ev3.seq) == (0, 1, 2)
+    assert [e.seq for e in ctl.events] == [0, 1, 2]
+
+
+def test_scale_event_seq_is_monotonic_across_controllers_and_kinds():
+    t = [0.0]
+    ctl = ec.ElasticController(3, dead_after_s=5.0, clock=lambda: t[0])
+    events = [ctl.add_hosts(1), ctl.add_hosts(2)]
+    t[0] = 1.0
+    for h in range(4):
+        ctl.heartbeat(h, 1)  # hosts 4, 5 never beat
+    t[0] = 6.0
+    events.append(ctl.poll())
+    assert all(e is not None for e in events)
+    seqs = [e.seq for e in events]
+    assert seqs == [0, 1, 2] and [e.seq for e in ctl.events] == seqs
+    # A fresh controller restarts its own counter (per-log ordering).
+    assert ec.ElasticController(2).add_hosts(1).seq == 0
 
 
 # ------------------------------------------------------------------- data

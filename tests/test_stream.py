@@ -1,0 +1,423 @@
+"""Streaming-graph subsystem: update model, incremental orderer, on-device
+ingest (tier-1 scale — the mesh-of-1 degenerate case; the 8-device suite is
+tests/test_stream_sharded.py)."""
+import numpy as np
+import pytest
+from conftest import hypothesis_or_stub
+
+from repro.core import metrics, ordering
+from repro.core.graph import rmat_graph
+from repro.elastic import controller as ec
+from repro.graphs import engine as E
+from repro.launch import mesh as MM
+from repro.stream import (
+    EdgeUpdateBatch,
+    IncrementalOrderer,
+    StreamConfig,
+    StreamingEngine,
+    SyntheticStream,
+    best_insert_position,
+)
+
+given, settings, st = hypothesis_or_stub()
+
+
+@pytest.fixture(scope="module")
+def ordered():
+    g = rmat_graph(7, 6, seed=0)
+    order = ordering.geo_order(g, seed=0)
+    return g, g.src[order].astype(np.int64), g.dst[order].astype(np.int64)
+
+
+def make_orderer(ordered, regions=4, **cfg):
+    g, src, dst = ordered
+    config = StreamConfig(**cfg) if cfg else StreamConfig()
+    return g, IncrementalOrderer(src, dst, g.num_vertices, regions=regions, config=config)
+
+
+# ------------------------------------------------------------------- updates
+def test_update_batch_canonicalizes():
+    b = EdgeUpdateBatch(
+        insert=np.array([[3, 1], [1, 3], [2, 2], [4, 5]]),
+        delete=np.array([[9, 7]]),
+    )
+    # Dedup (1,3)/(3,1), drop the self loop, canonicalize src < dst.
+    assert b.insert.tolist() == [[1, 3], [4, 5]]
+    assert b.delete.tolist() == [[7, 9]]
+    assert b.num_updates == 3
+
+
+def test_synthetic_stream_is_deterministic_and_consistent():
+    g = rmat_graph(6, 4, seed=1)
+    s1 = SyntheticStream(g, batch_size=32, seed=7)
+    s2 = SyntheticStream(g, batch_size=32, seed=7)
+    live = {(int(u), int(v)) for u, v in zip(g.src, g.dst)}
+    for _ in range(5):
+        b1, b2 = s1.batch(), s2.batch()
+        np.testing.assert_array_equal(b1.insert, b2.insert)
+        np.testing.assert_array_equal(b1.delete, b2.delete)
+        # Batches apply delete-then-insert (IncrementalOrderer.apply order).
+        for u, v in b1.delete.tolist():
+            assert (u, v) in live  # deletes always name live edges
+            live.discard((u, v))
+        for u, v in b1.insert.tolist():
+            assert (u, v) not in live  # inserts are always novel
+            live.add((u, v))
+    assert {tuple(e) for e in s1.edges().tolist()} == live
+    with pytest.raises(ValueError, match="in order"):
+        s1.batch(99)
+
+
+def test_stream_and_orderer_live_sets_stay_in_sync():
+    """Regression: a delete that hash-picks a same-batch insert used to leave
+    the orderer and generator with different live sets."""
+    g = rmat_graph(6, 4, seed=1)
+    order = ordering.geo_order(g, seed=0)
+    o = IncrementalOrderer(
+        g.src[order].astype(np.int64), g.dst[order].astype(np.int64),
+        g.num_vertices, regions=3,
+    )
+    s = SyntheticStream(g, batch_size=64, delete_frac=0.4, seed=3)
+    for _ in range(20):
+        o.apply(s.batch())
+    got = {(int(a), int(b)) for a, b in zip(*o.snapshot())}
+    assert got == {tuple(e) for e in s.edges().tolist()}
+    assert o.num_edges == s.num_edges
+
+
+def test_synthetic_stream_different_seeds_differ():
+    g = rmat_graph(6, 4, seed=1)
+    a = SyntheticStream(g, batch_size=32, seed=0).batch()
+    b = SyntheticStream(g, batch_size=32, seed=1).batch()
+    assert a.insert.tolist() != b.insert.tolist()
+
+
+# ------------------------------------------------------------------- orderer
+def test_orderer_snapshot_roundtrips_initial_order(ordered):
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=4)
+    s, d = o.snapshot()
+    np.testing.assert_array_equal(s, src)
+    np.testing.assert_array_equal(d, dst)
+    assert o.num_edges == g.num_edges
+    assert o.capacity == 4 * o.slots_per_region
+
+
+def test_orderer_insert_delete_idempotent(ordered):
+    g, o = make_orderer(ordered)
+    e0 = o.num_edges
+    batch = EdgeUpdateBatch(
+        insert=np.array([[int(g.src[0]), int(g.dst[0])]]),  # duplicate insert
+        delete=np.array([[g.num_vertices - 1, g.num_vertices - 2]]),  # absent
+    )
+    counts = o.apply(batch)
+    assert counts == {"inserted": 0, "deleted": 0, "skipped": 2}
+    assert o.num_edges == e0
+    # Real delete then re-insert lands the edge back.
+    edge = [int(g.src[5]), int(g.dst[5])]
+    o.apply(EdgeUpdateBatch(insert=np.zeros((0, 2)), delete=np.array([edge])))
+    assert o.num_edges == e0 - 1
+    o.apply(EdgeUpdateBatch(insert=np.array([edge]), delete=np.zeros((0, 2))))
+    assert o.num_edges == e0
+    s, d = o.snapshot()
+    assert {(int(a), int(b)) for a, b in zip(s, d)} == {
+        (int(a), int(b)) for a, b in zip(g.src, g.dst)
+    }
+
+
+def test_orderer_locality_placement_beats_append(ordered):
+    """Streaming a locality-heavy update mix, the locality placement must not
+    lose to naive append-at-end on the monitored region objective."""
+    g, src, dst = ordered
+    o_loc = IncrementalOrderer(src, dst, g.num_vertices, regions=4)
+    stream = SyntheticStream(g, batch_size=64, seed=3)
+    batches = [stream.batch() for _ in range(4)]
+    for b in batches:
+        o_loc.apply(b)
+    # Append-only variant: same updates, placement forced to the append path
+    # by emptying the incident index lookups.
+    o_app = IncrementalOrderer(src, dst, g.num_vertices, regions=4)
+    real_incident = o_app._incident
+    o_app._incident = {}
+    for b in batches:
+        o_app.apply(b)
+    o_app._incident = real_incident
+    assert o_loc.region_vertex_sum() <= o_app.region_vertex_sum()
+
+
+def test_orderer_grow_on_overflow(ordered):
+    g, src, dst = ordered
+    o = IncrementalOrderer(
+        src, dst, g.num_vertices, regions=2, config=StreamConfig(slack=0.05)
+    )
+    spr0 = o.slots_per_region
+    rng = np.random.default_rng(0)
+    new = []
+    while len(new) < int(0.2 * g.num_edges):
+        u, v = int(rng.integers(0, g.num_vertices)), int(rng.integers(0, g.num_vertices))
+        if u != v and (min(u, v), max(u, v)) not in new:
+            new.append((min(u, v), max(u, v)))
+    o.apply(EdgeUpdateBatch(insert=np.array(new), delete=np.zeros((0, 2))))
+    assert o.slots_per_region > spr0 and o.needs_resync
+    s, d = o.snapshot()
+    assert s.shape[0] == o.num_edges  # nothing lost in the grow
+
+
+def test_partial_reorder_improves_objective_and_keeps_graph(ordered):
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=4)
+    rng = np.random.default_rng(1)
+    # Degrade: random cross-community inserts.
+    new = set()
+    while len(new) < 60:
+        u, v = sorted(rng.integers(0, g.num_vertices, 2).tolist())
+        if u != v and (u, v) not in new:
+            new.add((u, v))
+    o.apply(EdgeUpdateBatch(insert=np.array(sorted(new)), delete=np.zeros((0, 2))))
+    before_edges = {(int(a), int(b)) for a, b in zip(*o.snapshot())}
+    before_obj = o.region_vertex_sum()
+    o.drain_ops()  # isolate the re-order's own ops
+    n = o.partial_reorder()
+    assert n > 0 and not o.needs_resync  # span rewrite travels as slot ops
+    after_edges = {(int(a), int(b)) for a, b in zip(*o.snapshot())}
+    assert after_edges == before_edges  # re-order never changes the graph
+    assert o.region_vertex_sum() <= before_obj
+    # The emitted ops cover exactly the span's slots and carry no degree
+    # deltas (a re-order moves edges, it never adds or removes them).
+    ops, deg = o.drain_ops()
+    assert deg == {}
+    spr = o.slots_per_region
+    span_regions = {op.slot // spr for op in ops}
+    assert len(span_regions) == o.config.span_regions
+    assert len(ops) == len(span_regions) * spr
+
+
+def test_full_rebuild_matches_fresh_geo(ordered):
+    g, o = make_orderer(ordered)
+    stream = SyntheticStream(g, batch_size=64, seed=5)
+    for _ in range(3):
+        o.apply(stream.batch())
+    o.full_rebuild(seed=0)
+    assert o.needs_resync and abs(o.drift() - 1.0) < 1e-9
+    s, d = o.snapshot()
+    gg = o.graph()
+    fresh = ordering.geo_order(gg, seed=0)
+    np.testing.assert_array_equal(s, gg.src[fresh])
+    np.testing.assert_array_equal(d, gg.dst[fresh])
+
+
+def test_rf_vs_oracle_margin_under_monitored_stream(ordered):
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=4)
+    stream = SyntheticStream(g, batch_size=32, seed=2)
+    for _ in range(10):
+        o.apply(stream.batch())
+        o.maybe_escalate()
+        o.needs_resync = False
+    inc, oracle = o.rf_vs_oracle(4)
+    assert inc <= oracle * o.config.rf_margin + 1e-9
+
+
+# ---------------------------------------------------- objective property tests
+def _check_objective_invariant_under_within_chunk_permutation(seed, k):
+    """Eq. (7) at a single k sums per-chunk vertex counts: permuting edges
+    WITHIN a chunk must not change it (satellite: ordering_objective
+    invariance)."""
+    g = rmat_graph(5, 3, seed=seed)
+    order = ordering.random_edge_order(g, seed=seed)
+    s, d = g.src[order].astype(np.int64), g.dst[order].astype(np.int64)
+    base = ordering.ordering_objective(s, d, g.num_edges, g.num_vertices, k, k)
+    rng = np.random.default_rng(seed)
+    from repro.core import cep
+
+    bounds = cep.chunk_bounds(g.num_edges, k)
+    s2, d2 = s.copy(), d.copy()
+    for p in range(k):
+        lo, hi = int(bounds[p]), int(bounds[p + 1])
+        perm = lo + rng.permutation(hi - lo)
+        s2[lo:hi], d2[lo:hi] = s2[perm], d2[perm]
+    permuted = ordering.ordering_objective(s2, d2, g.num_edges, g.num_vertices, k, k)
+    assert permuted == pytest.approx(base, rel=1e-12)
+
+
+def _check_incremental_placement_never_worse_than_append(seed, k):
+    """best_insert_position (the exact oracle of the streaming placement)
+    must never pick a position with a worse objective than append-at-end."""
+    g = rmat_graph(4, 3, seed=seed)
+    order = ordering.geo_order(g, seed=seed)
+    s, d = g.src[order].astype(np.int64), g.dst[order].astype(np.int64)
+    rng = np.random.default_rng(seed)
+    u, v = 0, 0
+    while u == v:
+        u, v = rng.integers(0, g.num_vertices, 2).tolist()
+    pos = best_insert_position(s, d, int(u), int(v), g.num_vertices, k)
+    assert 0 <= pos <= s.shape[0]
+
+    def obj_at(p):
+        return ordering.ordering_objective(
+            np.insert(s, p, min(u, v)), np.insert(d, p, max(u, v)),
+            g.num_edges + 1, g.num_vertices, k, k,
+        )
+
+    assert obj_at(pos) <= obj_at(s.shape[0]) + 1e-12
+
+
+@given(seed=st.integers(0, 8), k=st.integers(2, 6))
+@settings(max_examples=12, deadline=None)
+def test_objective_invariant_under_within_chunk_permutation(seed, k):
+    _check_objective_invariant_under_within_chunk_permutation(seed, k)
+
+
+@given(seed=st.integers(0, 10), k=st.integers(2, 5))
+@settings(max_examples=12, deadline=None)
+def test_incremental_placement_never_worse_than_append(seed, k):
+    _check_incremental_placement_never_worse_than_append(seed, k)
+
+
+@pytest.mark.parametrize("seed,k", [(0, 2), (1, 3), (2, 4), (5, 6)])
+def test_objective_properties_deterministic(seed, k):
+    """Deterministic fallback (conftest hypothesis shim skips @given without
+    hypothesis): same properties on fixed examples."""
+    _check_objective_invariant_under_within_chunk_permutation(seed, k)
+    _check_incremental_placement_never_worse_than_append(seed, min(k, 5))
+
+
+# ------------------------------------------------------------ ingest engine
+def test_streaming_engine_bit_identity_through_stream_and_rescales(ordered):
+    """Small-scale version of the acceptance: ingest batches with two
+    interleaved rescales; the sharded pack stays bit-identical to the host
+    slot oracle at every step (verify=True raises otherwise)."""
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=4)
+    eng = StreamingEngine(o, MM.make_graph_mesh(1))
+    stream = SyntheticStream(g, batch_size=32, seed=4)
+    for b in range(6):
+        if b == 2:
+            rs = eng.rescale(6, verify=True)
+            assert rs.k_old == 4 and rs.k_new == 6 and rs.moved_edges > 0
+        if b == 4:
+            rs = eng.rescale(3, verify=True)
+            assert rs.k_new == 3
+        stats = eng.ingest(stream.batch(), verify=True)
+        assert stats.num_edges == o.num_edges
+        eng.monitor()
+    assert eng.data.k == 3 and eng.data.num_edges == o.num_edges
+
+
+def test_rescale_flushes_pending_host_ops(ordered):
+    """Regression: orderer.apply called directly (outside engine.ingest)
+    followed by engine.rescale used to drop the pending slot ops — the gather
+    read a stale device buffer against the post-apply host layout."""
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=4)
+    eng = StreamingEngine(o, MM.make_graph_mesh(1))
+    stream = SyntheticStream(g, batch_size=32, seed=9)
+    o.apply(stream.batch())  # host-only: device mirror not yet synced
+    eng.rescale(6, verify=True)  # raises on divergence without the flush
+
+
+def test_orderer_rejects_out_of_range_vertices(ordered):
+    g, o = make_orderer(ordered)
+    with pytest.raises(ValueError, match="out of range"):
+        o.apply(EdgeUpdateBatch(insert=np.array([[-3, 5]]), delete=np.zeros((0, 2))))
+    with pytest.raises(ValueError, match="out of range"):
+        o.apply(
+            EdgeUpdateBatch(insert=np.array([[1, g.num_vertices]]), delete=np.zeros((0, 2)))
+        )
+
+
+def test_streaming_pack_runs_gas_between_ingests(ordered):
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=3)
+    eng = StreamingEngine(o, MM.make_graph_mesh(1))
+    stream = SyntheticStream(g, batch_size=32, seed=6)
+    eng.ingest(stream.batch(), verify=True)
+    # Reference: re-pack the orderer's snapshot from scratch.
+    s, d = o.snapshot()
+    ref = E.pack_ordered(s, d, g.num_vertices, 3)
+    np.testing.assert_allclose(
+        np.asarray(E.pagerank(eng.data, iterations=10)),
+        np.asarray(E.pagerank(ref, MM.make_test_mesh(1, 1), iterations=10)),
+        rtol=1e-6, atol=1e-9,
+    )
+    ds, its = E.sssp(eng.data, source=0)
+    dr, itr = E.sssp(ref, MM.make_test_mesh(1, 1), source=0)
+    assert its == itr
+    np.testing.assert_array_equal(np.asarray(ds), np.asarray(dr))
+
+
+def test_pack_slots_layout_and_scratch_column(ordered):
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=4)
+    data = E.pack_slots(o.slot_src, o.slot_dst, o.slot_valid, 4, g.num_vertices)
+    assert data.edges.shape == (4, o.slots_per_region + 1, 2)
+    assert np.all(np.asarray(data.mask)[:, -1] == 0)  # scratch col always masked
+    assert data.num_edges == o.num_edges and data.mirrors == -1
+    # Occupied slots keep their (region, column) coordinates.
+    mask = np.asarray(data.mask)[:, :-1].reshape(-1)
+    np.testing.assert_array_equal(mask.astype(bool), o.slot_valid)
+
+
+def test_pack_ordered_slack_rows(ordered):
+    g, src, dst = ordered
+    tight = E.pack_ordered(src, dst, g.num_vertices, 4)
+    slack = E.pack_ordered(src, dst, g.num_vertices, 4, e_max=int(tight.edges.shape[1]) + 7)
+    assert slack.edges.shape[1] == tight.edges.shape[1] + 7
+    np.testing.assert_array_equal(
+        np.asarray(slack.edges)[:, : tight.edges.shape[1]], np.asarray(tight.edges)
+    )
+    assert np.all(np.asarray(slack.mask)[:, tight.edges.shape[1] :] == 0)
+    with pytest.raises(ValueError, match="e_max"):
+        E.pack_ordered(src, dst, g.num_vertices, 4, e_max=1)
+
+
+# -------------------------------------------------------------- controller
+def test_controller_ingest_and_scale_events_share_seq(ordered):
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=4)
+    eng = StreamingEngine(o, MM.make_graph_mesh(1))
+    t = [0.0]
+    ctl = ec.ElasticController(4, dead_after_s=5.0, clock=lambda: t[0])
+    ctl.attach_stream(eng)
+    stream = SyntheticStream(g, batch_size=32, seed=8)
+    ev0 = ctl.ingest(stream.batch())
+    assert ev0.kind == "ingest" and ev0.inserted > 0
+    # A preemption mid-stream: scale event executes on the streaming pack.
+    t[0] = 1.0
+    for h in range(3):
+        ctl.heartbeat(h, 1)
+    t[0] = 6.0
+    ev1 = ctl.poll()
+    assert ev1 is not None and ev1.kind == "scale_in" and ev1.executed
+    assert eng.k == 3 and eng.data.k == 3
+    ev2 = ctl.ingest(stream.batch())
+    eng.verify_bit_identity()
+    # One shared monotonic seq across kinds → interleaved logs are orderable.
+    assert (ev0.seq, ev1.seq, ev2.seq) == (0, 1, 2)
+    assert [e.seq for e in ctl.events] == [0, 1, 2]
+
+
+def test_attached_stream_takes_precedence_over_engine_data(ordered):
+    """Regression: with both attach_engine and attach_stream, a scale event
+    whose k_new equals the stream's current k must NOT fall through to the
+    stale non-streaming pack."""
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=5)
+    eng = StreamingEngine(o, MM.make_graph_mesh(1))
+    ctl = ec.ElasticController(4)
+    ctl.attach_engine(E.pack_ordered(src, dst, g.num_vertices, 4))
+    ctl.attach_stream(eng)
+    ev = ctl.add_hosts(1)  # k_new = 5 == stream.k: nothing to execute
+    assert ev.k_new == 5 and not ev.executed and ctl.rescale_stats == []
+    assert ctl.engine_data.k == 4  # stale pack untouched
+    np.asarray(ctl.engine_data.edges)  # and not donated away
+    ev2 = ctl.add_hosts(1)  # k_new = 6: executes on the STREAM
+    assert ev2.executed and eng.k == 6 and ctl.engine_data.k == 4
+    assert ctl.rescale_stats[-1].k_new == 6
+    eng.verify_bit_identity()
+
+
+def test_controller_ingest_requires_stream():
+    ctl = ec.ElasticController(2)
+    with pytest.raises(ValueError, match="attach_stream"):
+        ctl.ingest(EdgeUpdateBatch(insert=np.zeros((0, 2)), delete=np.zeros((0, 2))))
