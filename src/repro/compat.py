@@ -33,6 +33,11 @@ __all__ = [
     "mesh_axis_sizes",
     "mesh_axis_size",
     "donate_jit",
+    "enable_cpu_collectives",
+    "distributed_initialize",
+    "process_index",
+    "process_count",
+    "array_from_process_local_data",
 ]
 
 
@@ -83,6 +88,65 @@ def mesh_axis_sizes(mesh) -> dict:
 def mesh_axis_size(mesh, axis: str, default: int = 1) -> int:
     """Size of one mesh axis; ``default`` for axes the mesh doesn't have."""
     return mesh_axis_sizes(mesh).get(axis, default)
+
+
+# --------------------------------------------------------------- distributed
+def enable_cpu_collectives(impl: str = "gloo") -> bool:
+    """Turn on cross-process collectives for the CPU backend.
+
+    The knob has moved across jax releases: newer jax has the enum flag
+    ``jax_cpu_collectives_implementation`` ("gloo" / "mpi"); 0.4.x spells the
+    gloo case as the bool flag ``jax_cpu_enable_gloo_collectives``; very old
+    jaxlibs have neither (multi-process CPU unsupported). Returns True when a
+    knob was found and set. Must run before the CPU backend initializes —
+    i.e. before the first jax.devices()/computation in the process.
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", impl)
+        return True
+    except (AttributeError, ValueError):
+        pass
+    if impl == "gloo":
+        try:
+            jax.config.update("jax_cpu_enable_gloo_collectives", True)
+            return True
+        except (AttributeError, ValueError):
+            pass
+    return False
+
+
+def distributed_initialize(coordinator_address: str, num_processes: int, process_id: int) -> None:
+    """``jax.distributed.initialize`` for an explicitly-specified process
+    group (the repo never relies on cluster auto-detection, which varies by
+    jax version and scheduler). On CPU backends the collectives implementation
+    is enabled first — without it multi-process CPU meshes initialize but every
+    cross-process transfer fails at run time."""
+    enable_cpu_collectives()
+    jax.distributed.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=int(num_processes),
+        process_id=int(process_id),
+    )
+
+
+def process_index() -> int:
+    return int(jax.process_index())
+
+
+def process_count() -> int:
+    return int(jax.process_count())
+
+
+def array_from_process_local_data(sharding, local_data, global_shape):
+    """``jax.make_array_from_process_local_data`` with the keyword spelling
+    that works across supported versions (``global_shape`` became optional /
+    keyword-only along the way)."""
+    try:
+        return jax.make_array_from_process_local_data(sharding, local_data, global_shape)
+    except TypeError:
+        return jax.make_array_from_process_local_data(
+            sharding, local_data, global_shape=global_shape
+        )
 
 
 def donate_jit(fn=None, *, donate_argnums=(), **jit_kwargs):

@@ -40,6 +40,8 @@ class ScaleEvent:
     reason: str
     executed: bool = False  # True when an attached engine was migrated on-device
     cross_device_bytes: int = 0  # executed device-to-device traffic (mesh runs)
+    cross_process_bytes: int = 0  # subset crossing jax.distributed process
+    # boundaries — the network bill of a multi-host run (launch/multihost.py)
     seq: int = -1  # monotonic event sequence, shared with IngestEvents
 
 
@@ -186,12 +188,14 @@ class ElasticController:
     def _emit(self, kind, k_old, k_new, lost, reason) -> ScaleEvent:
         executed = False
         cross_device_bytes = 0
+        cross_process_bytes = 0
         frac = None
         if self.stream is not None and k_new not in (0, self.stream.k):
             stats = self.stream.rescale(k_new)
             self.rescale_stats.append(stats)
             executed = True
             cross_device_bytes = stats.cross_device_bytes
+            cross_process_bytes = stats.cross_process_bytes
             frac = stats.moved_edges / max(stats.num_edges, 1)
         elif self.stream is None and self.engine_data is not None and k_new not in (0, self.engine_data.k):
             if self._rescaler is None:
@@ -202,6 +206,7 @@ class ElasticController:
             self.rescale_stats.append(stats)
             executed = True
             cross_device_bytes = stats.cross_device_bytes
+            cross_process_bytes = stats.cross_process_bytes
             # Report what was actually migrated, not the synthetic model.
             frac = stats.migrated_edges / max(stats.num_edges, 1)
         if frac is None:
@@ -211,7 +216,7 @@ class ElasticController:
                 frac = cep.migrated_edges_exact(self.state_elements, k_old, k_new) / self.state_elements
         ev = ScaleEvent(
             kind, k_old, k_new, lost, frac, reason, executed, cross_device_bytes,
-            seq=self._next_seq(),
+            cross_process_bytes, seq=self._next_seq(),
         )
         self.events.append(ev)
         return ev

@@ -25,6 +25,10 @@ Cost accounting distinguishes what a real multi-host deployment would see:
 * ``cross_device_*`` — the subset of migrated rows whose source and
   destination partitions live on different mesh devices (actual network /
   interconnect traffic; on a mesh of 1 this is 0);
+* ``cross_process_*`` — the subset of cross-device rows whose devices belong
+  to different ``jax.distributed`` processes (launch/multihost.py): what a
+  real multi-host cluster pays on the NIC, reported separately from
+  same-host device-to-device copies;
 * ``on_device_edges`` — migrated rows whose partitions share a device
   (cross_device_edges + on_device_edges == migrated_edges);
 * ``local_shift_edges`` — rows that keep their owner but land at a different
@@ -48,7 +52,14 @@ from ..core import cep, metrics
 from ..graphs import engine as graph_engine
 from ..launch import sharding as SH
 
-__all__ = ["EDGE_BYTES", "ProgramCache", "RescaleStats", "ElasticRescaler", "plan_segments"]
+__all__ = [
+    "EDGE_BYTES",
+    "ProgramCache",
+    "RescaleStats",
+    "ElasticRescaler",
+    "plan_segments",
+    "cross_process_plan_edges",
+]
 
 EDGE_BYTES = 8  # (src, dst) int32 per packed edge row
 
@@ -88,6 +99,30 @@ class ProgramCache:
         return value
 
 
+def _mesh_processes(mesh) -> int:
+    """Distinct processes behind a mesh (1 for mesh=None / single-process)."""
+    if mesh is None:
+        return 1
+    return len(set(SH.device_process_map(mesh).tolist()))
+
+
+def cross_process_plan_edges(plan: cep.ScalePlan, mesh) -> int:
+    """Edges of the plan's move ranges whose source and destination partitions
+    live on different *processes* of ``mesh`` — the Thm.-2 subset that a
+    multi-host deployment pays on the network. Pure host arithmetic over the
+    overlay (no device readback), so the network bill is known before the
+    migration runs."""
+    g = SH.graph_axis_size(mesh)
+    procs = SH.device_process_map(mesh)
+    return int(
+        sum(
+            hi - lo
+            for lo, hi, s, d in plan.moves
+            if procs[s % g] != procs[d % g]
+        )
+    )
+
+
 def plan_segments(plan: cep.ScalePlan) -> list:
     """The plan's overlay as ordered (lo, hi, src_part, dst_part) copy
     segments — stays spelled src == dst. This is the exact instruction list of
@@ -115,6 +150,11 @@ class RescaleStats:
     cross_device_edges: int = 0  # migrated rows crossing a device boundary
     cross_device_bytes: int = 0  # cross_device_edges · EDGE_BYTES
     on_device_edges: int = 0  # migrated rows staying on their device
+    processes: int = 1  # jax.distributed process count behind the mesh
+    cross_process_edges: int = 0  # migrated rows crossing a PROCESS boundary
+    cross_process_bytes: int = 0  # cross_process_edges · EDGE_BYTES — the
+    # network bill of a real multi-host deployment (subset of cross_device_*;
+    # same-host device-to-device copies never touch the NIC)
 
 
 class ElasticRescaler:
@@ -180,8 +220,14 @@ class ElasticRescaler:
             raise ValueError(f"plan is for |E|={n} but engine data has |E|={data.num_edges}")
         # Layout check without gathering the full mask: reduce per-row counts
         # on device (sharded, O(k_pad) ints to host) so recheck=False keeps
-        # the O(overlay-ranges) migration cost on a real mesh.
-        counts = np.asarray(jnp.sum(data.mask > 0, axis=1))
+        # the O(overlay-ranges) migration cost on a real mesh. On a
+        # multi-process mesh the row sums must land replicated before the host
+        # can read them (the sharded result spans non-addressable devices);
+        # the tiny counts program is cached like the migration programs.
+        if sharded and not data.mask.is_fully_addressable:
+            counts = np.asarray(self._counts_program(data.mask.shape, mesh)(data.mask))
+        else:
+            counts = np.asarray(jnp.sum(data.mask > 0, axis=1))
         sizes_old = np.diff(cep.chunk_bounds(n, k_old))
         want = np.zeros(counts.shape[0], dtype=sizes_old.dtype)
         for p in range(k_old):  # padding rows (sharded pack) must stay empty
@@ -200,7 +246,7 @@ class ElasticRescaler:
                 k_old=k_old, k_new=k_new, num_edges=n, migrated_edges=0,
                 migrated_bytes=0, stay_edges=n, local_shift_edges=0,
                 copy_ops=0, oracle_checked=False, elapsed_s=0.0, recheck_s=0.0,
-                devices=g,
+                devices=g, processes=_mesh_processes(mesh),
             )
             return data, stats
 
@@ -272,6 +318,23 @@ class ElasticRescaler:
         return self.execute(data, self.plan(data, k_new), verify=verify, recheck=recheck)
 
     # -------------------------------------------------------------- interns
+    def _counts_program(self, mask_shape, mesh):
+        """Per-row mask counts, replicated so every process can host-read them
+        (multi-process meshes only — fully-addressable arrays reduce eagerly).
+        Lives in the one kind-prefixed ProgramCache with the migration
+        programs, so program_cache_size bounds ALL cached programs."""
+        key = ("counts", tuple(mask_shape), mesh)
+        cached = self._programs.get(key)
+        if cached is not None:
+            return cached
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        program = jax.jit(
+            lambda m: jnp.sum(m > 0, axis=1), out_shardings=NamedSharding(mesh, P())
+        )
+        return self._programs.put(key, program)
+
     def _program(self, n: int, k_old: int, k_new: int, plan: cep.ScalePlan, mesh):
         g = SH.graph_axis_size(mesh)
         key = (n, k_old, k_new, mesh)
@@ -298,6 +361,7 @@ class ElasticRescaler:
             for lo, hi, s, d in plan.moves
             if SH.partition_device(s, g) != SH.partition_device(d, g)
         )
+        xproc = cross_process_plan_edges(plan, mesh)
         stats = RescaleStats(
             k_old=k_old,
             k_new=k_new,
@@ -314,6 +378,9 @@ class ElasticRescaler:
             cross_device_edges=int(cross),
             cross_device_bytes=int(cross) * EDGE_BYTES,
             on_device_edges=plan.migrated_edges - int(cross),
+            processes=_mesh_processes(mesh),
+            cross_process_edges=xproc,
+            cross_process_bytes=xproc * EDGE_BYTES,
         )
         mask_rows = np.zeros(k_pad_new, dtype=np.int64)
         for p in range(k_new):

@@ -187,7 +187,14 @@ class ShardedEngineData:
 
 
 def shard_engine_data(data: EngineData, mesh) -> ShardedEngineData:
-    """Distribute a packed EngineData over ``mesh``'s ``graph`` axis."""
+    """Distribute a packed EngineData over ``mesh``'s ``graph`` axis.
+
+    Works on multi-process meshes too: the host pack must then be replicated
+    on every process (graphs are built deterministically from the seed, or
+    broadcast by process 0 outside this function) and each process commits
+    only the rows its devices own (``launch.multihost.put_global``)."""
+    from ..launch import multihost as MH
+
     g = SH.graph_axis_size(mesh)
     k = data.k
     k_pad = SH.padded_partition_count(k, g)
@@ -199,9 +206,9 @@ def shard_engine_data(data: EngineData, mesh) -> ShardedEngineData:
     mask[rows] = np.asarray(data.mask)
     s_edges, s_mask, s_vert = SH.engine_shardings(mesh)
     return ShardedEngineData(
-        edges=jax.device_put(jnp.asarray(edges), s_edges),
-        mask=jax.device_put(jnp.asarray(mask), s_mask),
-        degrees=jax.device_put(jnp.asarray(data.degrees), s_vert),
+        edges=MH.put_global(edges, s_edges),
+        mask=MH.put_global(mask, s_mask),
+        degrees=MH.put_global(np.asarray(data.degrees), s_vert),
         num_vertices=data.num_vertices,
         k=k,
         mesh=mesh,
@@ -213,12 +220,15 @@ def shard_engine_data(data: EngineData, mesh) -> ShardedEngineData:
 
 def unshard_engine_data(sdata: ShardedEngineData) -> EngineData:
     """Host-side inverse of shard_engine_data: gather + un-permute rows back to
-    the partition-major replicated pack (the bit-identity oracle layout)."""
+    the partition-major replicated pack (the bit-identity oracle layout). On a
+    multi-process mesh the gather is a collective (every process must call)."""
+    from ..launch import multihost as MH
+
     rows = [SH.partition_row(p, sdata.k, sdata.devices) for p in range(sdata.k)]
     return EngineData(
-        edges=jnp.asarray(np.asarray(sdata.edges)[rows]),
-        mask=jnp.asarray(np.asarray(sdata.mask)[rows]),
-        degrees=jnp.asarray(np.asarray(sdata.degrees)),
+        edges=jnp.asarray(MH.host_read(sdata.edges)[rows]),
+        mask=jnp.asarray(MH.host_read(sdata.mask)[rows]),
+        degrees=jnp.asarray(MH.host_read(sdata.degrees)),
         num_vertices=sdata.num_vertices,
         k=sdata.k,
         mirrors=sdata.mirrors,

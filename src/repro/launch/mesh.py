@@ -27,10 +27,15 @@ def make_test_mesh(data: int = 1, model: int = 1):
 def make_graph_mesh(devices: int | None = None):
     """1-D mesh with the ``graph`` axis that owns graph partitions.
 
-    ``devices=None`` spans every visible device; a single-device mesh is the
-    degenerate case the elastic runtime treats identically (DESIGN.md §6).
-    Partitions are assigned round-robin to axis positions — see
-    launch/sharding.py partition_row / partition_device.
+    ``devices=None`` spans every visible device — and ``jax.devices()`` is the
+    GLOBAL list: in a ``jax.distributed`` process group
+    (launch/multihost.py initialize_distributed) the same call on every
+    process yields one mesh over all processes' devices, in process-major
+    order, so graph-axis position d belongs to process
+    ``jax.devices()[d].process_index``. A single-device (and single-process)
+    mesh is the degenerate case the elastic runtime treats identically
+    (DESIGN.md §6, §10). Partitions are assigned round-robin to axis
+    positions — see launch/sharding.py partition_row / partition_device.
     """
     n = len(jax.devices()) if devices is None else int(devices)
     return jax.make_mesh((n,), ("graph",))

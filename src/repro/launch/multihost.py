@@ -1,0 +1,323 @@
+"""Multi-host ``graph`` mesh: jax.distributed process groups + local test clusters.
+
+The single-process runtime (DESIGN.md §6) already routes every ingest scatter
+and rescale migration through NamedShardings over the ``graph`` mesh axis, so
+going multi-host "just" changes the mesh: ``make_graph_mesh`` spans
+``jax.devices()``, which after ``initialize_distributed`` is the *global*
+device list of every process in the group. This module owns everything that
+becomes process-aware at that point (DESIGN.md §10):
+
+* **Process bootstrap.** ``initialize_distributed`` / ``initialize_from_env``
+  wrap ``jax.distributed.initialize`` through ``repro.compat`` (the CPU
+  collectives knob and the initialize surface are the version-sensitive
+  parts). Environment variables (``REPRO_MH_*``) carry the cluster spec so a
+  worker script needs zero argument plumbing.
+* **Global-array construction.** ``put_global`` builds a mesh-committed array
+  from host data that every process holds replicas of (graphs are loaded /
+  generated deterministically from the seed in each process), handing each
+  process exactly its addressable block via
+  ``jax.make_array_from_process_local_data``. A 1-process mesh is the
+  degenerate case of the same call — never a separate code path.
+* **Host readback.** Arrays sharded over a multi-process mesh are not fully
+  addressable; ``host_read`` replicates through a jitted identity (one
+  all-gather) so oracle checks can still compare bytes, and
+  ``local_shard_rows`` fetches only this process's rows — what the
+  multi-process acceptance harness writes out for the parent to reassemble.
+* **Localhost clusters for tests/benchmarks.** ``spawn_local_cluster`` starts
+  N processes on this machine, each with ``devs_per_proc`` forced host
+  devices and a free-port coordinator, and returns per-process logs (printed
+  on failure so CI flakes are diagnosable).
+
+What crosses the NIC: partition p lives on graph-axis position p % g
+(launch/sharding.py), and positions map to processes via the mesh's device
+order — so exactly the ScalePlan move ranges whose source and destination
+positions belong to different processes are network traffic. ``RescaleStats``
+reports them as ``cross_process_edges/bytes``, computed from the plan overlay
+and ``sharding.device_process_map`` (no device readback needed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from .. import compat
+from . import sharding as SH
+
+__all__ = [
+    "ClusterSpec",
+    "LocalClusterResult",
+    "ProcResult",
+    "initialize_distributed",
+    "initialize_from_env",
+    "force_host_device_flags",
+    "free_port",
+    "put_global",
+    "host_read",
+    "local_shard_rows",
+    "spawn_local_cluster",
+]
+
+# Environment contract between spawn_local_cluster and worker processes.
+ENV_COORD = "REPRO_MH_COORDINATOR"
+ENV_NPROCS = "REPRO_MH_NUM_PROCESSES"
+ENV_PID = "REPRO_MH_PROCESS_ID"
+ENV_DEVS = "REPRO_MH_DEVS_PER_PROC"
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    coordinator: str  # "host:port" of process 0's coordinator service
+    num_processes: int
+    process_id: int
+    devs_per_proc: int = 1
+
+
+def force_host_device_flags(n: int, base: str = "") -> str:
+    """XLA_FLAGS value forcing ``n`` host devices, built explicitly: any
+    existing force-count flag in ``base`` is removed (never patched with
+    string substitution — see tests/test_multidevice.py history) and every
+    other flag is preserved."""
+    kept = [f for f in str(base).split() if not f.startswith(_FORCE_FLAG)]
+    return " ".join(kept + [f"{_FORCE_FLAG}={int(n)}"])
+
+
+def free_port(host: str = "127.0.0.1") -> int:
+    """An OS-assigned free TCP port (the usual bind(0) race caveat applies —
+    fine for spawning one local coordinator right after)."""
+    s = socket.socket()
+    try:
+        s.bind((host, 0))
+        return int(s.getsockname()[1])
+    finally:
+        s.close()
+
+
+def initialize_distributed(coordinator: str, num_processes: int, process_id: int) -> None:
+    """Join this process to the ``jax.distributed`` group. After this,
+    ``jax.devices()`` is the global device list (process-major order) and
+    ``make_graph_mesh`` spans it — all version-sensitive surface lives in
+    ``repro.compat``. Call before the first jax computation."""
+    compat.distributed_initialize(coordinator, num_processes, process_id)
+
+
+def initialize_from_env(environ=None) -> ClusterSpec | None:
+    """Initialize from the ``REPRO_MH_*`` variables ``spawn_local_cluster``
+    sets; returns the spec, or None (no-op) outside a spawned cluster — so a
+    worker script runs unchanged as a plain single process."""
+    env = os.environ if environ is None else environ
+    if ENV_COORD not in env:
+        return None
+    spec = ClusterSpec(
+        coordinator=env[ENV_COORD],
+        num_processes=int(env[ENV_NPROCS]),
+        process_id=int(env[ENV_PID]),
+        devs_per_proc=int(env.get(ENV_DEVS, 1)),
+    )
+    initialize_distributed(spec.coordinator, spec.num_processes, spec.process_id)
+    return spec
+
+
+# ------------------------------------------------------------- global arrays
+def put_global(host_arr, sharding):
+    """Commit a host array (replicated on every process) to ``sharding``.
+
+    Each process contributes exactly the rows its devices own
+    (``jax.make_array_from_process_local_data``); with one process the local
+    block is the whole array — the degenerate case of the same path. Falls
+    back to ``device_put`` when the sharding has no multi-process structure
+    helper available (plain single-process jax)."""
+    import jax
+
+    host_arr = np.asarray(host_arr)
+    if compat.process_count() == 1:
+        return jax.device_put(host_arr, sharding)
+    lo, hi = _addressable_row_block(host_arr.shape, sharding)
+    return compat.array_from_process_local_data(
+        sharding, host_arr[lo:hi], host_arr.shape
+    )
+
+
+def _addressable_row_block(global_shape, sharding) -> tuple[int, int]:
+    """[lo, hi) leading-axis rows this process's devices own under
+    ``sharding``. The graph layouts shard only the leading axis (or nothing),
+    so the addressable region is one contiguous row block; asserted here
+    rather than assumed — O(devices) interval merging, never O(rows)."""
+    spans = []
+    for _, idx in sharding.addressable_devices_indices_map(tuple(global_shape)).items():
+        sl = idx[0] if idx else slice(None)
+        lo = 0 if sl.start is None else int(sl.start)
+        hi = global_shape[0] if sl.stop is None else int(sl.stop)
+        spans.append((lo, hi))
+    spans.sort()
+    lo, hi = spans[0]
+    for s_lo, s_hi in spans[1:]:
+        if s_lo > hi:  # gap between this device's rows and the block so far
+            raise ValueError("addressable rows are not contiguous; not a graph-axis layout")
+        hi = max(hi, s_hi)
+    return lo, hi
+
+
+@functools.lru_cache(maxsize=8)
+def _replicate_fn(mesh):
+    """One jitted identity-to-replicated program per mesh (jit caches per
+    input shape internally) — host_read must not retrace on every readback."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.jit(lambda x: x, out_shardings=NamedSharding(mesh, P()))
+
+
+def host_read(arr) -> np.ndarray:
+    """Fetch a (possibly multi-process) committed array to host memory.
+
+    Fully-addressable arrays read directly. Arrays spanning other processes
+    are first replicated by a jitted identity with a replicated out_sharding —
+    one all-gather over the interconnect; every process gets the full value
+    (collective: all processes in the group must call this together)."""
+    import jax
+
+    if not isinstance(arr, jax.Array) or arr.is_fully_addressable:
+        return np.asarray(arr)
+    out = _replicate_fn(arr.sharding.mesh)(arr)
+    jax.block_until_ready(out)
+    return np.asarray(out)
+
+
+def local_shard_rows(arr) -> list[tuple[int, int, np.ndarray]]:
+    """This process's addressable shards of a leading-axis-sharded array, as
+    (row_lo, row_hi, data) blocks — what the acceptance harness persists so
+    the parent can reassemble the global buffer without any collective."""
+    blocks = []
+    for s in arr.addressable_shards:
+        sl = s.index[0] if s.index else slice(None)
+        lo = 0 if sl.start is None else int(sl.start)
+        hi = arr.shape[0] if sl.stop is None else int(sl.stop)
+        blocks.append((lo, hi, np.asarray(s.data)))
+    # Replicated arrays: every device holds full rows; dedup identical blocks.
+    uniq: dict[tuple[int, int], np.ndarray] = {}
+    for lo, hi, data in blocks:
+        if (lo, hi) in uniq:
+            if not np.array_equal(uniq[(lo, hi)], data):
+                raise AssertionError(f"divergent replicas for rows [{lo}, {hi})")
+        else:
+            uniq[(lo, hi)] = data
+    return sorted((lo, hi, d) for (lo, hi), d in uniq.items())
+
+
+# --------------------------------------------------------- localhost clusters
+@dataclasses.dataclass(frozen=True)
+class ProcResult:
+    process_id: int
+    returncode: int
+    stdout: str
+    stderr: str
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalClusterResult:
+    spec_coordinator: str
+    procs: tuple[ProcResult, ...]
+
+    @property
+    def ok(self) -> bool:
+        return all(p.returncode == 0 for p in self.procs)
+
+    def format_logs(self, tail: int = 4000) -> str:
+        """Per-process logs, for test/CI failure diagnosis."""
+        out = []
+        for p in self.procs:
+            out.append(f"--- process {p.process_id} (rc={p.returncode}) ---")
+            if p.stdout:
+                out.append(f"[stdout]\n{p.stdout[-tail:]}")
+            if p.stderr:
+                out.append(f"[stderr]\n{p.stderr[-tail:]}")
+        return "\n".join(out)
+
+
+def spawn_local_cluster(
+    n_procs: int,
+    devs_per_proc: int,
+    argv: list[str],
+    *,
+    timeout: float = 600.0,
+    env_extra: dict | None = None,
+    cwd: str | None = None,
+) -> LocalClusterResult:
+    """Run ``python <argv>`` as an ``n_procs``-process localhost cluster.
+
+    Each process gets ``devs_per_proc`` forced host devices (XLA_FLAGS built
+    explicitly, preserving unrelated flags) and the ``REPRO_MH_*`` variables
+    pointing at a free-port coordinator on process 0 — the worker calls
+    ``initialize_from_env()`` and sees an ``n_procs · devs_per_proc``-device
+    global platform. Blocks until every process exits (or kills the whole
+    group on timeout) and returns all logs; the caller decides what a failure
+    means (tests print ``format_logs()``)."""
+    if n_procs < 1:
+        raise ValueError("n_procs must be >= 1")
+    coord = f"127.0.0.1:{free_port()}"
+    procs = []
+    for pid in range(n_procs):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = force_host_device_flags(devs_per_proc, env.get("XLA_FLAGS", ""))
+        env[ENV_COORD] = coord
+        env[ENV_NPROCS] = str(n_procs)
+        env[ENV_PID] = str(pid)
+        env[ENV_DEVS] = str(devs_per_proc)
+        if env_extra:
+            env.update({k: str(v) for k, v in env_extra.items()})
+        procs.append(
+            subprocess.Popen(
+                [sys.executable] + list(argv),
+                stdout=subprocess.PIPE,
+                stderr=subprocess.PIPE,
+                text=True,
+                env=env,
+                cwd=cwd,
+            )
+        )
+    # Drain every child's pipes CONCURRENTLY: the processes form one
+    # collective group, so a single child blocked writing to a full pipe
+    # (verbose backend logging, a long traceback) would stall every other
+    # child at its next collective — sequential communicate() would then sit
+    # out the whole timeout instead of surfacing the real error.
+    outputs: dict[int, tuple] = {}
+
+    def drain(pid: int, p) -> None:
+        try:
+            outputs[pid] = p.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            out, err = p.communicate()
+            outputs[pid] = (
+                out,
+                (err or "") + f"\n[spawn_local_cluster] killed after {timeout}s timeout",
+            )
+    threads = [
+        threading.Thread(target=drain, args=(pid, p), daemon=True)
+        for pid, p in enumerate(procs)
+    ]
+    results = []
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout + 30.0)
+    finally:
+        for q in procs:
+            if q.poll() is None:
+                q.kill()
+    for pid, p in enumerate(procs):
+        out, err = outputs.get(pid, ("", "[spawn_local_cluster] no output collected"))
+        rc = p.returncode if p.returncode is not None else -1
+        results.append(ProcResult(pid, rc, out or "", err or ""))
+    return LocalClusterResult(coord, tuple(results))

@@ -58,6 +58,23 @@ def row_partition(r: int, k: int, g: int) -> int:
     return (r % m) * g + r // m
 
 
+def device_process_map(mesh) -> np.ndarray:
+    """(g,) process index of each ``graph``-axis position. All zeros on a
+    single-process mesh (and with ``mesh=None``), so single-process is the
+    degenerate case of the same per-process accounting."""
+    if mesh is None:
+        return np.zeros(1, dtype=np.int64)
+    devs = np.asarray(mesh.devices).reshape(-1)
+    return np.asarray([int(getattr(d, "process_index", 0)) for d in devs], dtype=np.int64)
+
+
+def partition_process(p: int, mesh) -> int:
+    """Process owning partition p: the process of graph-axis position p % g.
+    Composes the round-robin partition→device map with the mesh's
+    device→process map (multi-host runs: launch/multihost.py)."""
+    return int(device_process_map(mesh)[p % graph_axis_size(mesh)])
+
+
 def edges_spec() -> P:
     """(k_pad, E_max, 2) packed edge buffer: partitions over the graph axis."""
     return P(GRAPH_AXIS, None, None)

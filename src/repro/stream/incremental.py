@@ -180,6 +180,11 @@ class IncrementalOrderer:
         self._incident: dict[int, set] = {}
         self._rc: list[dict[int, int]] = [dict() for _ in range(regions)]
         self._free = np.full(regions, self._spr, dtype=np.int64)  # free slots/region
+        # Per-region sorted free-slot arrays, built lazily (one vectorized scan
+        # per region per batch) and maintained incrementally as slots fill /
+        # free — the batched replacement for the per-insert occupancy rescans
+        # the placement loop used to do (ROADMAP follow-up).
+        self._free_cache: list = [None] * int(regions)
         self._gather_from = None  # new slot ← old slot; only relayout builds it
         bounds = cep.chunk_bounds(e, regions)
         for p in range(regions):
@@ -244,6 +249,15 @@ class IncrementalOrderer:
         {inserted, deleted, skipped}. Deletes run first so a batch that
         replaces edges reuses the freed slots. Device-mirror ops accumulate in
         ``drain_ops`` order-insensitively (last write per slot wins)."""
+        ins = batch.insert
+        if ins.size:
+            # Whole-batch range check, vectorized (negative ids would silently
+            # wrap in both host np.add.at and the device scatter): reject the
+            # batch before any mutation instead of dying halfway through it.
+            bad = (ins[:, 0] < 0) | (ins[:, 1] >= self.num_vertices)
+            if np.any(bad):
+                u, v = ins[int(np.flatnonzero(bad)[0])].tolist()
+                raise ValueError(f"edge ({u}, {v}) out of range (|V|={self.num_vertices})")
         inserted = deleted = skipped = 0
         for u, v in batch.delete.tolist():
             if self._delete(int(u), int(v)):
@@ -267,6 +281,7 @@ class IncrementalOrderer:
         self.slot_src[s] = 0
         self.slot_dst[s] = 0
         self._free[region] += 1
+        self._cache_freed(s)
         for w in (u, v):
             inc = self._incident.get(w)
             if inc is not None:
@@ -300,6 +315,7 @@ class IncrementalOrderer:
         self.slot_dst[slot] = v
         self.slot_valid[slot] = True
         self._free[region] -= 1
+        self._cache_fill(slot)
         self._edge2slot[(u, v)] = slot
         self._incident.setdefault(u, set()).add(slot)
         self._incident.setdefault(v, set()).add(slot)
@@ -310,10 +326,19 @@ class IncrementalOrderer:
         self._ops[slot] = SlotOp(slot, u, v, True)
         return slot
 
+    def _median_slot(self, u: int, v: int) -> Optional[int]:
+        """Median incident slot of (u, v) via an O(d) numpy partial sort — the
+        element at sorted index d // 2, exactly what sorting would pick."""
+        union = self._incident.get(u, set()) | self._incident.get(v, set())
+        if not union:
+            return None
+        arr = np.fromiter(union, dtype=np.int64, count=len(union))
+        mid = arr.size // 2
+        return int(np.partition(arr, mid)[mid])
+
     def _place(self, u: int, v: int) -> Optional[int]:
         """Locality-best free slot for (u, v) — see module docstring."""
-        inc = sorted(self._incident.get(u, set()) | self._incident.get(v, set()))
-        target = inc[len(inc) // 2] if inc else None
+        target = self._median_slot(u, v)
         candidates: list[int] = []
         if target is not None:
             candidates.append(target // self._spr)
@@ -346,17 +371,41 @@ class IncrementalOrderer:
                 return r
         return None
 
+    def _free_slots(self, region: int) -> np.ndarray:
+        """Sorted absolute slot ids of ``region``'s free slots, from the
+        incremental cache (scanned at most once per region between bulk
+        re-layouts; kept exact by ``_cache_fill`` / ``_cache_freed``)."""
+        a = self._free_cache[region]
+        if a is None:
+            lo = region * self._spr
+            a = lo + np.flatnonzero(~self.slot_valid[lo : lo + self._spr])
+            self._free_cache[region] = a
+        return a
+
+    def _cache_fill(self, slot: int) -> None:
+        a = self._free_cache[slot // self._spr]
+        if a is not None:
+            self._free_cache[slot // self._spr] = a[a != slot]
+
+    def _cache_freed(self, slot: int) -> None:
+        r = slot // self._spr
+        a = self._free_cache[r]
+        if a is not None:
+            self._free_cache[r] = np.insert(a, int(np.searchsorted(a, slot)), slot)
+
     def _free_in(self, region: int, near: Optional[int] = None) -> Optional[int]:
-        lo = region * self._spr
-        free = np.flatnonzero(~self.slot_valid[lo : lo + self._spr])
+        """Candidate-slot scoring over the cached free list: nearest free slot
+        to ``near`` by |slot − near|, first-of-ties (identical decision to the
+        historical per-insert occupancy rescan, minus the rescan)."""
+        free = self._free_slots(region)
         if free.size == 0:
             return None
         if near is None:
-            return int(lo + free[0])
-        return int(lo + free[np.argmin(np.abs(free + lo - near))])
+            return int(free[0])
+        return int(free[np.argmin(np.abs(free - near))])
 
     def _any_free_slot(self, near: Optional[int]) -> Optional[int]:
-        free = np.flatnonzero(~self.slot_valid)
+        free = np.concatenate([self._free_slots(r) for r in range(self._regions)])
         if free.size == 0:
             return None
         if near is None:
@@ -484,6 +533,8 @@ class IncrementalOrderer:
         self.slot_src[lo:hi] = 0
         self.slot_dst[lo:hi] = 0
         self._free[r0:r1] = spr
+        for r in range(r0, r1):  # bulk rewrite: rescan these regions lazily
+            self._free_cache[r] = None
         # Re-fill: CEP chunks of the span order over the span regions.
         e = int(src_o.shape[0])
         bounds = cep.chunk_bounds(e, r1 - r0)

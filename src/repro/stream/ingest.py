@@ -33,7 +33,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from ..compat import donate_jit
 from ..core import cep
 from ..elastic.rescale_exec import EDGE_BYTES, ProgramCache
@@ -81,6 +84,8 @@ class StreamRescaleStats:
     cross_device_edges: int  # moved edges whose regions live on different devices
     cross_device_bytes: int
     elapsed_s: float
+    cross_process_edges: int = 0  # moved edges whose devices live on different
+    cross_process_bytes: int = 0  # jax.distributed processes (the NIC bill)
 
 
 class StreamingEngine:
@@ -139,6 +144,19 @@ class StreamingEngine:
 
     def _upload(self) -> graph_engine.ShardedEngineData:
         return graph_engine.shard_engine_data(self.oracle_pack(), self.mesh)
+
+    def _host_operand(self, arr):
+        """Host-built program operand (scatter indices, gather maps). On a
+        multi-process mesh these must be committed replicated global arrays —
+        every process builds the identical value from its replica of the host
+        orderer state — because uncommitted single-device arrays cannot feed a
+        program whose out_shardings span other processes. The single-process
+        path stays the plain device transfer."""
+        if compat.process_count() == 1:
+            return jnp.asarray(arr)
+        from ..launch import multihost as MH
+
+        return MH.put_global(np.asarray(arr), NamedSharding(self.mesh, P()))
 
     def _resync(self) -> None:
         """Full host re-upload after a slot re-layout (grow / full rebuild).
@@ -229,12 +247,12 @@ class StreamingEngine:
             self.data.edges,
             self.data.mask,
             self.data.degrees,
-            jnp.asarray(rows),
-            jnp.asarray(cols),
-            jnp.asarray(vals),
-            jnp.asarray(mvals),
-            jnp.asarray(verts),
-            jnp.asarray(dvals),
+            self._host_operand(rows),
+            self._host_operand(cols),
+            self._host_operand(vals),
+            self._host_operand(mvals),
+            self._host_operand(verts),
+            self._host_operand(dvals),
         )
         self.data = dataclasses.replace(
             self.data,
@@ -309,11 +327,21 @@ class StreamingEngine:
                 (new_regions != old_regions) & (new_regions % g != old_regions % g)
             )
         )
+        procs = SH.device_process_map(self.mesh)
+        xproc = int(
+            np.count_nonzero(
+                (new_regions != old_regions)
+                & (procs[new_regions % g] != procs[old_regions % g])
+            )
+        )
         program = self._compact_program(
             (int(old_edges.shape[0]), e_cap_old, k_pad_new, e_cap_new, self.mesh)
         )
         edges, mask = program(
-            old_edges, jnp.asarray(src_row), jnp.asarray(src_col), jnp.asarray(validf)
+            old_edges,
+            self._host_operand(src_row),
+            self._host_operand(src_col),
+            self._host_operand(validf),
         )
         self.data = graph_engine.ShardedEngineData(
             edges=edges,
@@ -340,6 +368,8 @@ class StreamingEngine:
             cross_device_edges=cross,
             cross_device_bytes=cross * EDGE_BYTES,
             elapsed_s=elapsed,
+            cross_process_edges=xproc,
+            cross_process_bytes=xproc * EDGE_BYTES,
         )
 
     def _compact_program(self, key):

@@ -1,0 +1,191 @@
+"""Per-process worker for the multi-host acceptance (tests/test_multihost.py).
+
+``launch.multihost.spawn_local_cluster`` runs this file once per process; each
+worker joins the ``jax.distributed`` group via ``initialize_from_env``, builds
+the SAME graph deterministically from the seed (no host is special — this is
+the "replicated deterministic load" path of DESIGN.md §10), and executes the
+two prior acceptances on the now-global ``graph`` mesh:
+
+* **rescale** — the PR-2 acceptance: pack at k=8 over all processes' devices,
+  execute ScalePlans 8 → 12 → 8 (``ElasticRescaler``, ``recheck=False`` so no
+  collective readback hides in the timed path);
+* **stream** — the PR-3 acceptance: ingest batches through the controller
+  with a scale-out to 12 and a preemption down to 7 interleaved
+  (``StreamingEngine`` + ``ElasticController``).
+
+Each process writes ONLY its local shard rows (`local_shard_rows`) plus a
+stats/event JSON to ``--out``; the parent test reassembles the global buffers
+from all processes' files and compares them byte-for-byte against the
+single-process oracle it computes itself — so the proof never trusts a
+cross-process collective to check cross-process execution. Logs go to stdout
+(one line per step, prefixed with the process id) so spawn_local_cluster can
+print per-process traces when something fails in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+from repro.launch import multihost as MH  # noqa: E402  (before jax device init)
+
+SPEC = MH.initialize_from_env()  # must run before the first jax computation
+
+import jax  # noqa: E402
+
+from repro.core import cep, ordering  # noqa: E402
+from repro.core.graph import rmat_graph  # noqa: E402
+from repro.elastic import controller as ec  # noqa: E402
+from repro.elastic.rescale_exec import EDGE_BYTES, ElasticRescaler  # noqa: E402
+from repro.graphs import engine as E  # noqa: E402
+from repro.launch import mesh as MM  # noqa: E402
+from repro.launch import sharding as SH  # noqa: E402
+from repro.stream import IncrementalOrderer, StreamingEngine, SyntheticStream  # noqa: E402
+
+GRAPH_SCALE = 8
+GRAPH_EDGE_FACTOR = 6
+GRAPH_SEED = 0
+STREAM_SEED = 1
+STREAM_BATCH = 64
+
+
+def log(pid: int, msg: str) -> None:
+    print(f"[proc {pid}] {msg}", flush=True)
+
+
+def build_ordered():
+    """The acceptance graph + GEO order — bit-identical in every process."""
+    g = rmat_graph(GRAPH_SCALE, GRAPH_EDGE_FACTOR, seed=GRAPH_SEED)
+    order = ordering.geo_order(g, seed=0)
+    return g, g.src[order], g.dst[order]
+
+
+def save_blocks(store: dict, name: str, arr) -> None:
+    """Record this process's local shard rows of a global array."""
+    for lo, hi, data in MH.local_shard_rows(arr):
+        store[f"{name}__{lo}__{hi}"] = data
+
+
+def run_rescale_phase(src, dst, num_vertices, mesh, store: dict) -> dict:
+    pid = jax.process_index()
+    n = int(src.shape[0])
+    rescaler = ElasticRescaler()
+    d8 = E.pack_ordered_sharded(src, dst, num_vertices, 8, mesh)
+    log(pid, f"packed k=8 over {len(jax.devices())} global devices")
+
+    import time
+
+    t0 = time.perf_counter()
+    plan_out = cep.scale_plan(n, 8, 12)
+    plan_s = time.perf_counter() - t0
+    d12, s_out = rescaler.execute(d8, plan_out, recheck=False)
+    log(pid, f"8->12 executed: cross_process_bytes={s_out.cross_process_bytes}")
+    save_blocks(store, "rescale_k12_edges", d12.edges)
+    save_blocks(store, "rescale_k12_mask", d12.mask)
+
+    plan_in = cep.scale_plan(n, 12, 8)
+    d8b, s_in = rescaler.execute(d12, plan_in, recheck=False)
+    log(pid, f"12->8 executed: cross_process_bytes={s_in.cross_process_bytes}")
+    save_blocks(store, "rescale_k8_edges", d8b.edges)
+    save_blocks(store, "rescale_k8_mask", d8b.mask)
+
+    def stats_dict(s):
+        return {
+            "k_old": s.k_old, "k_new": s.k_new,
+            "migrated_edges": s.migrated_edges, "migrated_bytes": s.migrated_bytes,
+            "cross_device_edges": s.cross_device_edges,
+            "cross_device_bytes": s.cross_device_bytes,
+            "cross_process_edges": s.cross_process_edges,
+            "cross_process_bytes": s.cross_process_bytes,
+            "devices": s.devices, "processes": s.processes,
+            "exec_s": s.elapsed_s,
+        }
+
+    return {
+        "plan_s": plan_s,
+        "out": stats_dict(s_out),
+        "in": stats_dict(s_in),
+        "edge_bytes": EDGE_BYTES,
+    }
+
+
+def stream_script(ctl, stream, clock):
+    """The PR-3 rescale-under-ingest acceptance script, expressed once so the
+    parent test can replay the identical controller decisions host-side."""
+    ctl.ingest(stream.batch())
+    ctl.add_hosts(4)  # 8 -> 12 under ingest
+    ctl.ingest(stream.batch())
+    clock[0] = 1.0
+    for h in range(7):
+        ctl.heartbeat(h, 1)
+    clock[0] = 6.0
+    ctl.poll()  # 5 silent hosts preempted: 12 -> 7
+    ctl.ingest(stream.batch())
+
+
+def run_stream_phase(g, src, dst, mesh, store: dict) -> dict:
+    pid = jax.process_index()
+    o = IncrementalOrderer(
+        src.astype(np.int64), dst.astype(np.int64), g.num_vertices, regions=8
+    )
+    eng = StreamingEngine(o, mesh)
+    clock = [0.0]
+    ctl = ec.ElasticController(8, dead_after_s=5.0, clock=lambda: clock[0])
+    ctl.attach_stream(eng)
+    stream = SyntheticStream(g, batch_size=STREAM_BATCH, seed=STREAM_SEED)
+    stream_script(ctl, stream, clock)
+    log(pid, f"stream script done: k={eng.k}, events={len(ctl.events)}")
+    eng.verify_bit_identity()  # in-child check (collective unshard)
+    log(pid, "in-child bit identity OK")
+
+    save_blocks(store, "stream_edges", eng.data.edges)
+    save_blocks(store, "stream_mask", eng.data.mask)
+    save_blocks(store, "stream_degrees", eng.data.degrees)
+    events = [
+        {
+            "kind": ev.kind,
+            "seq": ev.seq,
+            "executed": getattr(ev, "executed", None),
+            "cross_process_bytes": getattr(ev, "cross_process_bytes", None),
+            "escalation": getattr(ev, "escalation", None),
+        }
+        for ev in ctl.events
+    ]
+    return {"k_final": eng.k, "num_edges": o.num_edges, "events": events}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True, help="directory for per-process results")
+    args = ap.parse_args()
+    pid = jax.process_index()
+    log(pid, f"{jax.process_count()} processes, {len(jax.local_devices())} local / "
+             f"{len(jax.devices())} global devices")
+
+    g, src, dst = build_ordered()
+    mesh = MM.make_graph_mesh()  # spans every process's devices
+    store: dict = {}
+    record = {
+        "process_id": pid,
+        "num_processes": jax.process_count(),
+        "devices": len(jax.devices()),
+        "device_process_map": SH.device_process_map(mesh).tolist(),
+        "graph": {"num_vertices": g.num_vertices, "num_edges": g.num_edges},
+        "rescale": run_rescale_phase(src, dst, g.num_vertices, mesh, store),
+    }
+    record["stream"] = run_stream_phase(g, src, dst, mesh, store)
+
+    os.makedirs(args.out, exist_ok=True)
+    np.savez(os.path.join(args.out, f"proc{pid}.npz"), **store)
+    with open(os.path.join(args.out, f"proc{pid}.json"), "w") as fh:
+        json.dump(record, fh, indent=2)
+    log(pid, "DONE")
+
+
+if __name__ == "__main__":
+    main()

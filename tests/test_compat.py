@@ -89,3 +89,48 @@ def test_donate_jit_decorator_form():
         return 2 * x
 
     assert int(g(jnp.asarray(21))) == 42
+
+
+# --------------------------------------------------------------- distributed
+def test_process_helpers_single_process():
+    """Outside a jax.distributed group the process helpers report the
+    1-process degenerate case every multi-host code path must handle."""
+    assert compat.process_count() == 1
+    assert compat.process_index() == 0
+
+
+def test_enable_cpu_collectives_finds_a_knob():
+    """Supported jax versions all have one spelling of the CPU-collectives
+    knob; idempotent (initialize_from_env may race a user's own call)."""
+    assert compat.enable_cpu_collectives() is True
+    assert compat.enable_cpu_collectives() is True  # idempotent
+
+
+def test_force_host_device_flags_builds_explicitly():
+    from repro.launch.multihost import force_host_device_flags
+
+    assert force_host_device_flags(8) == "--xla_force_host_platform_device_count=8"
+    # Replaces an existing count instead of string-patching it — the exact
+    # failure mode of .replace("8", "512") on a flag whose digits collide.
+    got = force_host_device_flags(
+        512, "--xla_dump_to=/tmp/d --xla_force_host_platform_device_count=8"
+    )
+    assert got == "--xla_dump_to=/tmp/d --xla_force_host_platform_device_count=512"
+    assert force_host_device_flags(4, got).count("device_count") == 1
+
+
+def test_put_global_and_local_shard_rows_degenerate_single_process():
+    """put_global / local_shard_rows on a 1-device mesh: the degenerate case
+    of the multi-host path (DESIGN.md §10) — same layout as device_put."""
+    from jax.sharding import NamedSharding
+
+    from repro.launch import multihost as MH
+
+    mesh = MM.make_graph_mesh(1)
+    arr = np.arange(12, dtype=np.int32).reshape(6, 2)
+    committed = MH.put_global(arr, NamedSharding(mesh, P("graph", None)))
+    np.testing.assert_array_equal(np.asarray(committed), arr)
+    blocks = MH.local_shard_rows(committed)
+    assert [(lo, hi) for lo, hi, _ in blocks] == [(0, 6)]
+    np.testing.assert_array_equal(blocks[0][2], arr)
+    np.testing.assert_array_equal(MH.host_read(committed), arr)

@@ -8,11 +8,22 @@ import textwrap
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.launch.multihost import force_host_device_flags  # noqa: E402
 
 
 def run_with_devices(code: str, n: int = 8, timeout: int = 420) -> str:
+    """Run ``code`` in a child forced to ``n`` host devices.
+
+    The device-count flag is built explicitly (force_host_device_flags strips
+    any pre-existing count and preserves unrelated flags) — never patched with
+    string substitution, which corrupts the value whenever the old count's
+    digits appear elsewhere in the string. Only the child's env copy is
+    touched; tests that must mutate ``os.environ`` in the child restore it in
+    a ``finally`` (see test_production_mesh_shapes)."""
     env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["XLA_FLAGS"] = force_host_device_flags(n, env.get("XLA_FLAGS", ""))
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     r = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
@@ -225,15 +236,28 @@ def test_sharded_stream_ingest_acceptance_8dev():
 
 
 def test_production_mesh_shapes():
+    """512 forced devices come from run_with_devices(n=512) building the flag
+    explicitly. The child re-asserts the count instead of patching XLA_FLAGS
+    with str.replace (which corrupted the flag whenever the digits of the old
+    count appeared in the new one), and any env mutation it does make is
+    restored in a finally."""
     run_with_devices("""
         import os
-        os.environ["XLA_FLAGS"] = os.environ["XLA_FLAGS"].replace("8", "512")
-        import jax
-        from repro.launch import mesh as MM
-        m1 = MM.make_production_mesh()
-        assert m1.devices.shape == (16, 16) and m1.axis_names == ("data", "model")
-        m2 = MM.make_production_mesh(multi_pod=True)
-        assert m2.devices.shape == (2, 16, 16) and m2.axis_names == ("pod", "data", "model")
-        assert MM.num_chips(m2) == 512
+        from repro.launch.multihost import force_host_device_flags
+        saved = os.environ.get("XLA_FLAGS")
+        os.environ["XLA_FLAGS"] = force_host_device_flags(512, saved or "")
+        try:
+            import jax
+            from repro.launch import mesh as MM
+            m1 = MM.make_production_mesh()
+            assert m1.devices.shape == (16, 16) and m1.axis_names == ("data", "model")
+            m2 = MM.make_production_mesh(multi_pod=True)
+            assert m2.devices.shape == (2, 16, 16) and m2.axis_names == ("pod", "data", "model")
+            assert MM.num_chips(m2) == 512
+        finally:
+            if saved is None:
+                os.environ.pop("XLA_FLAGS", None)
+            else:
+                os.environ["XLA_FLAGS"] = saved
         print("MESH-OK")
     """, n=512)

@@ -1,0 +1,283 @@
+"""Multi-host acceptance: a 2-process × 4-device localhost cluster executes
+the PR-2 rescale acceptance (8 → 12 → 8) and the PR-3 rescale-under-ingest
+acceptance on ONE global ``graph`` mesh, with migrations crossing a real
+process boundary.
+
+The proof deliberately avoids trusting the thing under test: each worker
+(tests/multihost_harness.py) writes only the shard rows its own devices hold,
+and this parent reassembles the global buffers from both processes' files and
+compares them byte-for-byte against oracles computed single-process right
+here — the same ``pack_ordered`` / ``pack_slots`` + row-permutation oracles
+the 8-device single-process suite uses. Cross-process traffic is re-derived
+independently from the ScalePlan overlay and the partition→process map the
+cluster reported.
+
+Skips gracefully (with the per-process logs) when the installed jax cannot
+form localhost process groups; CI runs it in the dedicated ``multihost`` job.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import cep
+from repro.elastic.rescale_exec import EDGE_BYTES
+from repro.graphs import engine as E
+from repro.launch import multihost as MH
+from repro.launch import sharding as SH
+from repro.stream import IncrementalOrderer, SyntheticStream
+from repro.stream.ingest import IngestStats, StreamRescaleStats
+
+import multihost_harness as H
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_PROCS = 2
+DEVS_PER_PROC = 4
+G_DEVICES = N_PROCS * DEVS_PER_PROC
+
+_UNSUPPORTED_MARKERS = (
+    "gloo",
+    "cpu_collectives",
+    "collectives_implementation",
+    "Unable to initialize backend",
+    "UNIMPLEMENTED",
+    "DEADLINE_EXCEEDED",
+)
+# Printed by the harness only once the process group has formed: failures
+# AFTER this banner are regressions in the code under test, never an
+# unsupported-platform skip — otherwise a deadlocked collective would turn
+# the multihost CI job green.
+_BOOTSTRAP_BANNER = "global devices"
+
+
+@pytest.fixture(scope="module")
+def cluster(tmp_path_factory):
+    """Spawn the 2×4 cluster once; every test reads its artifacts."""
+    out = tmp_path_factory.mktemp("multihost")
+    res = MH.spawn_local_cluster(
+        N_PROCS,
+        DEVS_PER_PROC,
+        [os.path.join(ROOT, "tests", "multihost_harness.py"), "--out", str(out)],
+        timeout=540.0,
+        cwd=ROOT,
+    )
+    if not res.ok:
+        logs = res.format_logs()
+        print(logs, file=sys.stderr)  # per-process logs for CI diagnosis
+        bootstrapped = any(_BOOTSTRAP_BANNER in p.stdout for p in res.procs)
+        if not bootstrapped and any(m in logs for m in _UNSUPPORTED_MARKERS):
+            pytest.skip(f"localhost jax.distributed unsupported here:\n{logs[-2000:]}")
+        pytest.fail(f"multihost harness failed:\n{logs}")
+    records = []
+    shards = []
+    for pid in range(N_PROCS):
+        with open(out / f"proc{pid}.json") as fh:
+            records.append(json.load(fh))
+        shards.append(dict(np.load(out / f"proc{pid}.npz")))
+    return records, shards
+
+
+def reassemble(shards, name: str, global_rows: int) -> np.ndarray:
+    """Merge every process's (lo, hi) row blocks into the global array,
+    requiring full coverage and byte-agreement on any overlap (replicated
+    arrays overlap fully)."""
+    rows = {}
+    shape_tail = None
+    for store in shards:
+        for key, data in store.items():
+            if not key.startswith(name + "__"):
+                continue
+            _, lo, hi = key.rsplit("__", 2)
+            lo, hi = int(lo), int(hi)
+            shape_tail = data.shape[1:]
+            for r in range(lo, hi):
+                row = data[r - lo]
+                if r in rows:
+                    assert np.array_equal(rows[r], row), f"{name}: divergent row {r}"
+                else:
+                    rows[r] = row
+    assert shape_tail is not None, f"no shards found for {name}"
+    assert sorted(rows) == list(range(global_rows)), (
+        f"{name}: rows covered {sorted(rows)} != 0..{global_rows - 1}"
+    )
+    return np.stack([rows[r] for r in range(global_rows)])
+
+
+def expected_global_pack(src, dst, num_vertices: int, k: int, g: int):
+    """The single-process oracle: pack_ordered at k, rows permuted into the
+    device-major layout a g-device mesh holds (pure numpy — no mesh here)."""
+    pack = E.pack_ordered(src, dst, num_vertices, k)
+    k_pad = SH.padded_partition_count(k, g)
+    e_max = int(pack.edges.shape[1])
+    edges = np.zeros((k_pad, e_max, 2), dtype=np.int32)
+    mask = np.zeros((k_pad, e_max), dtype=np.float32)
+    rows = [SH.partition_row(p, k, g) for p in range(k)]
+    edges[rows] = np.asarray(pack.edges)
+    mask[rows] = np.asarray(pack.mask)
+    return edges, mask
+
+
+class _HostReplayStream:
+    """Minimal StreamingEngine protocol over a bare IncrementalOrderer, so the
+    harness's controller script replays host-side with the exact decision
+    sequence but no devices — the parent's oracle for the stream phase."""
+
+    def __init__(self, orderer):
+        self.o = orderer
+
+    @property
+    def k(self) -> int:
+        return self.o.regions
+
+    def ingest(self, batch) -> IngestStats:
+        counts = self.o.apply(batch)
+        self.o.needs_resync = False
+        self.o.drain_ops()
+        return IngestStats(
+            inserted=counts["inserted"], deleted=counts["deleted"],
+            skipped=counts["skipped"], scatter_ops=0, resynced=False,
+            elapsed_s=0.0, num_edges=self.o.num_edges,
+        )
+
+    def monitor(self) -> str:
+        esc = self.o.maybe_escalate()
+        self.o.needs_resync = False
+        self.o.drain_ops()
+        return esc
+
+    def rescale(self, k_new: int) -> StreamRescaleStats:
+        k_old = self.o.regions
+        self.o.relayout(int(k_new))
+        self.o.drain_gather_map()
+        self.o.needs_resync = False
+        return StreamRescaleStats(
+            k_old=k_old, k_new=int(k_new), num_edges=self.o.num_edges,
+            moved_edges=0, cep_plan_edges=0, cross_device_edges=0,
+            cross_device_bytes=0, elapsed_s=0.0,
+        )
+
+
+def replay_stream_oracle(g, src, dst):
+    """Replay the harness's controller script on the host only; returns the
+    final orderer (its slot arrays are the byte oracle)."""
+    from repro.elastic import controller as ec
+
+    o = IncrementalOrderer(
+        src.astype(np.int64), dst.astype(np.int64), g.num_vertices, regions=8
+    )
+    clock = [0.0]
+    ctl = ec.ElasticController(8, dead_after_s=5.0, clock=lambda: clock[0])
+    ctl.attach_stream(_HostReplayStream(o))
+    stream = SyntheticStream(g, batch_size=H.STREAM_BATCH, seed=H.STREAM_SEED)
+    H.stream_script(ctl, stream, clock)
+    return o, ctl
+
+
+# --------------------------------------------------------------------- tests
+def test_cluster_spans_two_processes(cluster):
+    records, _ = cluster
+    for pid, rec in enumerate(records):
+        assert rec["process_id"] == pid
+        assert rec["num_processes"] == N_PROCS
+        assert rec["devices"] == G_DEVICES
+        assert rec["rescale"]["out"]["devices"] == G_DEVICES
+        assert rec["rescale"]["out"]["processes"] == N_PROCS
+    # Balanced partition→process map: each process owns devs_per_proc axis
+    # positions, and every process reports the same map.
+    pmap = records[0]["device_process_map"]
+    assert sorted(pmap) == sorted([p for p in range(N_PROCS) for _ in range(DEVS_PER_PROC)])
+    assert all(rec["device_process_map"] == pmap for rec in records)
+
+
+def test_rescale_acceptance_matches_single_process_oracle(cluster):
+    """8 → 12 → 8 on the 2-process mesh: gathered shard rows byte-identical
+    to the single-process pack oracle at each step."""
+    records, shards = cluster
+    g, src, dst = H.build_ordered()
+    for k, name in ((12, "rescale_k12"), (8, "rescale_k8")):
+        want_edges, want_mask = expected_global_pack(src, dst, g.num_vertices, k, G_DEVICES)
+        got_edges = reassemble(shards, f"{name}_edges", want_edges.shape[0])
+        got_mask = reassemble(shards, f"{name}_mask", want_mask.shape[0])
+        np.testing.assert_array_equal(got_edges, want_edges)
+        np.testing.assert_array_equal(got_mask, want_mask)
+        assert got_edges.dtype == want_edges.dtype and got_mask.dtype == want_mask.dtype
+
+
+def test_cross_process_bytes_equal_plan_boundary_bytes(cluster):
+    """For the one-partition-per-device 8 → 12 rescale the reported
+    cross_process_bytes must equal the ScalePlan bytes whose move ranges cross
+    the process boundary — recomputed here from the raw overlay and the
+    reported partition→process map, independent of RescaleStats."""
+    records, _ = cluster
+    g, src, dst = H.build_ordered()
+    pmap = records[0]["device_process_map"]
+    for key, k_old, k_new in (("out", 8, 12), ("in", 12, 8)):
+        plan = cep.scale_plan(g.num_edges, k_old, k_new)
+        expect_edges = sum(
+            hi - lo
+            for lo, hi, s, d in plan.moves
+            if pmap[s % G_DEVICES] != pmap[d % G_DEVICES]
+        )
+        for rec in records:
+            got = rec["rescale"][key]
+            assert got["cross_process_edges"] == expect_edges
+            assert got["cross_process_bytes"] == expect_edges * EDGE_BYTES
+            # The NIC bill is a strict subset of cross-device traffic, and
+            # the one-partition-per-device scale-out moves every migrated
+            # edge across devices (PR-2 invariant, now split by process).
+            assert got["cross_process_edges"] <= got["cross_device_edges"]
+            assert 0 < got["cross_process_edges"] < got["migrated_edges"]
+    # Both processes must agree on every non-timing stat (same plan, same map).
+    def strip_times(r):
+        return {
+            key: {f: v for f, v in stats.items() if not f.endswith("_s")}
+            for key, stats in r.items()
+            if isinstance(stats, dict)
+        }
+
+    assert strip_times(records[0]["rescale"]) == strip_times(records[1]["rescale"])
+
+
+def test_stream_acceptance_matches_host_replay_oracle(cluster):
+    """Rescale-under-ingest on the 2-process mesh: the final streaming pack,
+    reassembled from per-process shard rows, equals pack_slots of a host-only
+    replay of the same controller script, byte for byte."""
+    records, shards = cluster
+    g, src, dst = H.build_ordered()
+    o, ctl = replay_stream_oracle(g, src, dst)
+    assert o.regions == records[0]["stream"]["k_final"] == 7
+    assert o.num_edges == records[0]["stream"]["num_edges"]
+
+    pack = E.pack_slots(o.slot_src, o.slot_dst, o.slot_valid, o.regions, g.num_vertices)
+    want_edges, want_mask = np.asarray(pack.edges), np.asarray(pack.mask)
+    k_pad = SH.padded_partition_count(o.regions, G_DEVICES)
+    rows = [SH.partition_row(p, o.regions, G_DEVICES) for p in range(o.regions)]
+    glob_edges = np.zeros((k_pad,) + want_edges.shape[1:], want_edges.dtype)
+    glob_mask = np.zeros((k_pad,) + want_mask.shape[1:], want_mask.dtype)
+    glob_edges[rows] = want_edges
+    glob_mask[rows] = want_mask
+
+    got_edges = reassemble(shards, "stream_edges", k_pad)
+    got_mask = reassemble(shards, "stream_mask", k_pad)
+    got_deg = reassemble(shards, "stream_degrees", g.num_vertices)
+    np.testing.assert_array_equal(got_edges, glob_edges)
+    np.testing.assert_array_equal(got_mask, glob_mask)
+    np.testing.assert_array_equal(got_deg, np.asarray(pack.degrees))
+
+
+def test_stream_events_ordered_and_consistent_across_processes(cluster):
+    records, _ = cluster
+    ev0 = records[0]["stream"]["events"]
+    for rec in records:
+        evs = rec["stream"]["events"]
+        assert evs == ev0  # every process sees the identical event log
+        seqs = [e["seq"] for e in evs]
+        assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+        kinds = [e["kind"] for e in evs]
+        assert "ingest" in kinds and ("scale_out" in kinds and "scale_in" in kinds)
+        for e in evs:
+            if e["kind"] in ("scale_out", "scale_in"):
+                assert e["executed"] is True
+                assert e["cross_process_bytes"] is not None and e["cross_process_bytes"] >= 0

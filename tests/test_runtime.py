@@ -11,6 +11,7 @@ from repro.data import pipeline as dp
 from repro.elastic import controller as ec
 from repro.elastic import expert_place as ep
 from repro.elastic import resharder as rs
+from repro.elastic.rescale_exec import ElasticRescaler, ProgramCache
 from repro.train import optimizer as O
 
 
@@ -109,6 +110,91 @@ def test_scale_event_seq_is_monotonic_across_controllers_and_kinds():
     assert seqs == [0, 1, 2] and [e.seq for e in ctl.events] == seqs
     # A fresh controller restarts its own counter (per-log ordering).
     assert ec.ElasticController(2).add_hosts(1).seq == 0
+
+
+# ---------------------------------------------------------------- ProgramCache
+# The LRU is load-bearing for three program families (rescale migration,
+# ingest scatter, streaming compact) — unit-test the container itself, not
+# just the end-to-end eviction behavior of test_rescale_exec.py.
+def test_program_cache_lru_eviction_order():
+    c = ProgramCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert list(c) == ["a", "b"]  # least- to most-recently used
+    assert c.get("a") == 1  # hit refreshes recency …
+    assert list(c) == ["b", "a"]
+    c.put("c", 3)  # … so "b", not "a", is the victim
+    assert list(c) == ["a", "c"] and "b" not in c
+    assert c.get("b") is None and len(c) == 2
+
+
+def test_program_cache_capacity_one_thrash():
+    c = ProgramCache(1)
+    for i in range(5):
+        c.put(("k", i), i)
+        assert len(c) == 1 and c.get(("k", i)) == i
+        if i:
+            assert ("k", i - 1) not in c  # every put evicts the previous entry
+    # Re-putting the resident key must not evict it.
+    c.put(("k", 4), 40)
+    assert len(c) == 1 and c.get(("k", 4)) == 40
+
+
+def test_program_cache_kind_prefixed_keys_do_not_collide():
+    """StreamingEngine keys scatter/compact programs by a kind prefix over
+    otherwise-identical shape signatures; one cache must hold all kinds and a
+    hit on one kind must not serve (or evict) another."""
+    c = ProgramCache(3)
+    sig = (8, 128, 4)  # same static shape signature for every family
+    c.put(("migrate",) + sig, "m")
+    c.put(("scatter",) + sig, "s")
+    c.put(("compact",) + sig, "c")
+    assert len(c) == 3
+    assert c.get(("scatter",) + sig) == "s"
+    assert c.get(("migrate",) + sig) == "m"
+    assert c.get(("compact",) + sig) == "c"
+    # Capacity pressure evicts by recency across kinds, not by kind.
+    c.put(("migrate",) + (9, 128, 4), "m2")
+    assert ("scatter",) + sig not in c  # LRU victim was the scatter entry
+    assert c.get(("migrate",) + sig) == "m" and c.get(("compact",) + sig) == "c"
+
+
+def test_program_cache_resize_has_no_stale_reuse():
+    """Changing program_cache_size means a NEW rescaler/cache: programs traced
+    under the old capacity must not leak into the new instance, and the new
+    capacity is enforced from the first put."""
+    src = np.arange(64, dtype=np.int64)
+    dst = (src + 1) % 64
+    from repro.graphs import engine as E
+
+    r1 = ElasticRescaler(program_cache_size=4)
+    for k_new in (5, 6, 7):
+        r1.rescale(E.pack_ordered(src, dst, 64, 4), k_new)
+    assert len(r1._programs) == 3 and r1.program_cache_size == 4
+
+    r2 = ElasticRescaler(program_cache_size=1)
+    assert len(r2._programs) == 0  # nothing carried over from r1
+    d2, _ = r2.rescale(E.pack_ordered(src, dst, 64, 4), 5)
+    r2.rescale(d2, 6)
+    assert len(r2._programs) == 1  # new capacity enforced immediately
+    assert list(r2._programs)[0][1:3] == (5, 6)  # only the latest program kept
+    assert len(r1._programs) == 3  # and the old instance is untouched
+
+
+def test_program_cache_hits_shared_across_rescale_kinds():
+    """One ElasticRescaler instance serves repeated oscillation between
+    configurations from cache: the second pass over the same (k_old, k_new)
+    pairs must trace nothing new."""
+    src = np.arange(60, dtype=np.int64)
+    dst = (src + 7) % 60
+    from repro.graphs import engine as E
+
+    r = ElasticRescaler(program_cache_size=8)
+    for _ in range(2):  # second lap = pure cache hits
+        d = E.pack_ordered(src, dst, 60, 4)
+        d, _ = r.rescale(d, 6)
+        d, _ = r.rescale(d, 4)
+    assert len(r._programs) == 2  # (4→6) and (6→4), each traced exactly once
 
 
 # ------------------------------------------------------------------- data
