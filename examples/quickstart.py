@@ -51,9 +51,14 @@ def main() -> None:
           f"bit-identical to a from-scratch k=17 pack (RF={new_data.replication_factor:.3f})")
 
     # 6. STREAM updates while staying rescalable: incremental ordering on the
-    #    host, scatter-based ingest on device, full-GEO quality oracle.
-    #    (Full scenario + committed numbers: python -m benchmarks.run stream
-    #    → BENCH_stream.json.)
+    #    host, scatter-based ingest on device, full-GEO quality oracle. The
+    #    quality monitor's PARTIAL re-order rung also runs on-mesh: a cached
+    #    span-repair program recomputes the degraded span's order from the
+    #    sharded buffers and scatters it back, while the host advances its
+    #    bookkeeping through the byte-exact numpy mirror — engine.monitor()
+    #    below never ships a span re-upload (span_repair="host" restores the
+    #    old behavior). (Full scenario + committed numbers:
+    #    python -m benchmarks.run stream → BENCH_stream.json.)
     from repro.launch import mesh as MM
     from repro.stream import IncrementalOrderer, StreamingEngine, SyntheticStream
 

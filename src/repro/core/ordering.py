@@ -62,28 +62,38 @@ def geo_order(
 
     rng = np.random.default_rng(seed)
     indptr, nbrs, eids = g.indptr, g.nbr, g.eid
-    deg = np.diff(indptr).astype(np.int64)
+
+    # The greedy below is an interpreter-bound pointer chase: plain python
+    # lists beat numpy arrays for scalar indexing by ~4× (no per-access
+    # boxing), and every quantity is an exact int — the produced order is
+    # IDENTICAL to the historical array-based loop (it prices the streaming
+    # subsystem's full-rebuild rung, so it must be as fast as python allows).
+    indptr_l = indptr.tolist()
+    nbrs_l = nbrs.tolist()
+    eids_l = eids.tolist()
 
     order = np.empty(e_total, dtype=np.int64)  # order[i] = edge id
-    edge_done = np.zeros(e_total, dtype=bool)
-    d = deg.copy()  # D[v] — remaining (unordered) degree
-    m = np.zeros(v_total, dtype=np.int64)  # M[v] — latest order touching v
-    touched = np.zeros(v_total, dtype=bool)
-    selected = np.zeros(v_total, dtype=bool)
+    edge_done = [False] * e_total
+    d = np.diff(indptr).astype(np.int64).tolist()  # D[v] — remaining degree
+    m = [0] * v_total  # M[v] — latest order touching v
+    touched = [False] * v_total
+    selected = [False] * v_total
     # nbr cursor: skip-ahead pointer so each adjacency is scanned O(1) amortized.
-    cursor = indptr[:-1].copy()
+    cursor = indptr[:-1].tolist()
 
     heap: list[tuple[int, int]] = []  # (priority, vertex)
-    cur_pri = np.full(v_total, np.iinfo(np.int64).max, dtype=np.int64)
+    maxint = int(np.iinfo(np.int64).max)
+    cur_pri = [maxint] * v_total
+    heappush, heappop = heapq.heappush, heapq.heappop
 
     def push(v: int) -> None:
         p = alpha * d[v] - beta * m[v]
         if p != cur_pri[v]:
             cur_pri[v] = p
-            heapq.heappush(heap, (int(p), int(v)))
+            heappush(heap, (p, v))
 
     # Random fallback scan order (paper: RandomVertex()).
-    rand_perm = rng.permutation(v_total)
+    rand_perm = rng.permutation(v_total).tolist()
     rand_ptr = 0
 
     i = 0  # next order index == |X^phi|
@@ -104,7 +114,7 @@ def geo_order(
         # --- select v_min ---
         vmin = -1
         while heap:
-            p, v = heapq.heappop(heap)
+            p, v = heappop(heap)
             if selected[v] or p != cur_pri[v]:
                 continue
             if d[v] == 0:
@@ -114,7 +124,7 @@ def geo_order(
             break
         if vmin < 0:
             while rand_ptr < v_total:
-                v = int(rand_perm[rand_ptr])
+                v = rand_perm[rand_ptr]
                 rand_ptr += 1
                 if not selected[v] and d[v] > 0:
                     vmin = v
@@ -122,31 +132,31 @@ def geo_order(
             if vmin < 0:
                 # All vertices exhausted but edges remain — cannot happen on a
                 # consistent graph; guard anyway.
-                rest = np.flatnonzero(~edge_done)
-                for eid_ in rest:
-                    order_edge(int(eid_), int(g.src[eid_]), int(g.dst[eid_]))
+                for eid_ in range(e_total):
+                    if not edge_done[eid_]:
+                        order_edge(eid_, int(g.src[eid_]), int(g.dst[eid_]))
                 break
         selected[vmin] = True
 
         # --- order one-hop edges e_{vmin,u}, ascending u (CSR is pre-sorted) ---
         lo = cursor[vmin]
-        hi = indptr[vmin + 1]
+        hi = indptr_l[vmin + 1]
         for j in range(lo, hi):
-            eid_ = int(eids[j])
+            eid_ = eids_l[j]
             if edge_done[eid_]:
                 continue
-            u = int(nbrs[j])
+            u = nbrs_l[j]
             order_edge(eid_, vmin, u)
             # --- two-hop: e_{u,w} with w recently ordered (within δ) ---
             jlo = cursor[u]
-            jhi = indptr[u + 1]
+            jhi = indptr_l[u + 1]
             for jj in range(jlo, jhi):
-                eid2 = int(eids[jj])
+                eid2 = eids_l[jj]
                 if edge_done[eid2]:
                     if jj == cursor[u]:
-                        cursor[u] += 1
+                        cursor[u] = jj + 1
                     continue
-                w = int(nbrs[jj])
+                w = nbrs_l[jj]
                 if w == vmin:
                     continue
                 if touched[w] and not selected[w] and (i - m[w]) <= delta and m[w] > 0:

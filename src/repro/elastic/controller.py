@@ -56,6 +56,10 @@ class IngestEvent:
     elapsed_s: float  # host placement + device ingest (excludes the monitor)
     monitor_s: float = 0.0  # quality monitor + any escalation it ran
     seq: int = -1
+    repair: str = ""  # what the rung executed: "device" | "host" | "oracle" |
+    # "differential" | "resync" | "skipped" | "" (none)
+    rung_count: int = 0  # cumulative firings of THIS event's rung (incl. it)
+    rung_total_s: float = 0.0  # cumulative seconds spent in this rung so far
 
 
 class ElasticController:
@@ -171,6 +175,10 @@ class ElasticController:
         t0 = time.perf_counter()
         escalation = self.stream.monitor()
         monitor_s = time.perf_counter() - t0
+        # Per-rung ladder accounting (StreamingEngine keeps the counters; a
+        # host-only replay stream may not — default to empty).
+        counts = getattr(self.stream, "rung_counts", {})
+        totals = getattr(self.stream, "rung_s", {})
         ev = IngestEvent(
             kind="ingest",
             inserted=stats.inserted,
@@ -181,6 +189,9 @@ class ElasticController:
             elapsed_s=stats.elapsed_s,
             monitor_s=monitor_s,
             seq=self._next_seq(),
+            repair=getattr(self.stream, "last_repair", ""),
+            rung_count=int(counts.get(escalation, 0)),
+            rung_total_s=float(totals.get(escalation, 0.0)),
         )
         self.events.append(ev)
         return ev

@@ -66,10 +66,14 @@ EDGE_BYTES = 8  # (src, dst) int32 per packed edge row
 
 class ProgramCache:
     """Bounded LRU of jitted device programs keyed by their static shape/mesh
-    signature. One instance per program family (migration, ingest scatter,
-    streaming compact): a long-lived controller oscillating between
-    configurations pays tracing once per signature without the cache growing
-    without limit."""
+    signature. Keys are KIND-prefixed tuples (("migrate", ...), ("counts",
+    ...), ("scatter", ...), ("compact", ...), ("span_repair", ...)) so every
+    program family of one runtime component shares a single cache — a
+    long-lived controller oscillating between configurations pays tracing
+    once per signature without any cache growing without limit, and
+    ``program_cache_size`` bounds ALL of a component's cached programs at
+    once (ElasticRescaler: migrate + counts; StreamingEngine: scatter +
+    compact + span_repair)."""
 
     def __init__(self, size: int):
         if size < 1:
@@ -337,7 +341,7 @@ class ElasticRescaler:
 
     def _program(self, n: int, k_old: int, k_new: int, plan: cep.ScalePlan, mesh):
         g = SH.graph_axis_size(mesh)
-        key = (n, k_old, k_new, mesh)
+        key = ("migrate", n, k_old, k_new, mesh)
         cached = self._programs.get(key)
         if cached is not None:
             return cached

@@ -21,11 +21,15 @@ default); ``best_insert_position`` is the exact ``ordering_objective`` oracle
 of the same decision, used by the property tests.
 
 Escalation ladder (DESIGN.md §9): when the monitored objective drifts past a
-threshold, ``partial_reorder`` re-runs GEO on only the degraded span of
-regions and rewrites those slots; ``full_rebuild`` re-runs ``geo_order`` on
-the whole current graph. A full ``geo_order`` re-run is the oracle the
-incremental order must stay within ``StreamConfig.rf_margin`` of
-(``rf_vs_oracle``).
+threshold, the partial rung re-orders only the degraded span of regions —
+on-mesh by default (``ingest.StreamingEngine`` delegates via
+``maybe_escalate(partial_fn=...)`` and this class advances the host slot
+array through ``partial_reorder_mirror``, the byte-exact numpy twin of the
+device program in ``kernels/span_reorder.py``); ``partial_reorder`` keeps the
+host ``geo_order``-on-the-span rung, which doubles as the repair-quality
+oracle. ``full_rebuild`` re-runs ``geo_order`` on the whole current graph — a
+full ``geo_order`` re-run is the oracle the incremental order must stay
+within ``StreamConfig.rf_margin`` of (``rf_vs_oracle``).
 """
 from __future__ import annotations
 
@@ -52,6 +56,9 @@ class StreamConfig:
     partial_drift: float = 1.04  # normalized drift that triggers a span re-order
     full_drift: float = 1.08  # drift that escalates to a full geo_order rebuild
     span_regions: int = 1  # width (in regions) of a partial re-order
+    partial_cooldown: int = 0  # monitor steps to skip after a partial repair
+    # (hysteresis: a span repair needs fresh updates before repairing again
+    # pays for itself; 0 = PR-3 behavior, re-fire while over threshold)
     rf_margin: float = 1.10  # incremental RF must stay within this × oracle RF
 
     def __post_init__(self):
@@ -130,6 +137,7 @@ class IncrementalOrderer:
         self.num_vertices = int(num_vertices)
         self.config = config
         self.needs_resync = False  # set by re-layouts; cleared by the engine
+        self._cooldown = 0  # partial-rung hysteresis counter (maybe_escalate)
         self._ops: dict[int, SlotOp] = {}
         self._deg_delta: dict[int, int] = {}  # vertex → degree change since drain
         self._layout(
@@ -169,7 +177,21 @@ class IncrementalOrderer:
         gaps are interleaved (PMA style) and early inserts never shift."""
         e = int(src_o.shape[0])
         if spr is None:
-            spr = max(2, int(np.ceil(e * (1.0 + self.config.slack) / regions)))
+            raw = max(2, int(np.ceil(e * (1.0 + self.config.slack) / regions)))
+            prev = self._spr if getattr(self, "_regions", None) == regions else None
+            if prev is not None and prev >= raw:
+                # Same region count and the current width still fits: KEEP it.
+                # slots_per_region defines the device buffer width, i.e. the
+                # static signature of every cached scatter / compact /
+                # span-repair program — a full rebuild at |E|+500 must not
+                # recompile three programs.
+                spr = prev
+            else:
+                # Fresh width: 25% growth headroom, 256-aligned, so a k-phase
+                # of steady ingest re-laying out at every full rebuild stays
+                # on one program signature (compiles only at k changes, which
+                # the engine warms inside the rescale).
+                spr = max(2, -(-int(np.ceil(raw * 1.25)) // 256) * 256)
         self._regions = int(regions)
         self._spr = int(spr)
         c = self.capacity
@@ -186,28 +208,35 @@ class IncrementalOrderer:
         # the placement loop used to do (ROADMAP follow-up).
         self._free_cache: list = [None] * int(regions)
         self._gather_from = None  # new slot ← old slot; only relayout builds it
-        bounds = cep.chunk_bounds(e, regions)
-        for p in range(regions):
-            lo, hi = int(bounds[p]), int(bounds[p + 1])
-            n_p = hi - lo
-            if n_p > self._spr:
-                raise ValueError(
-                    f"region {p} chunk ({n_p} edges) exceeds slots_per_region={self._spr}"
-                )
-            if n_p == 0:
-                continue
-            cols = (np.arange(n_p, dtype=np.int64) * self._spr) // n_p
-            slots = p * self._spr + cols
-            self.slot_src[slots] = src_o[lo:hi]
-            self.slot_dst[slots] = dst_o[lo:hi]
-            self.slot_valid[slots] = True
-            self._free[p] -= n_p
-            for s_, a, b in zip(slots.tolist(), src_o[lo:hi].tolist(), dst_o[lo:hi].tolist()):
-                self._edge2slot[(a, b)] = s_
-                self._incident.setdefault(a, set()).add(s_)
-                self._incident.setdefault(b, set()).add(s_)
-                self._count(p, a, +1)
-                self._count(p, b, +1)
+        if e == 0:
+            return
+        # Vectorized fill (the same CEP spread the device splice computes):
+        # the per-edge dict/set bookkeeping below is bulk-built — this runs on
+        # every full rebuild and relayout, so it must not out-cost geo_order.
+        bounds = np.asarray(cep.chunk_bounds(e, regions), dtype=np.int64)
+        sizes = np.diff(bounds)
+        if int(sizes.max()) > self._spr:
+            p_bad = int(np.argmax(sizes))
+            raise ValueError(
+                f"region {p_bad} chunk ({int(sizes[p_bad])} edges) exceeds "
+                f"slots_per_region={self._spr}"
+            )
+        j = np.arange(e, dtype=np.int64)
+        p = np.asarray(cep.id2p(e, regions, j), dtype=np.int64)
+        n_p = bounds[p + 1] - bounds[p]
+        cols = ((j - bounds[p]) * self._spr) // n_p
+        slots = p * self._spr + cols
+        self.slot_src[slots] = src_o
+        self.slot_dst[slots] = dst_o
+        self.slot_valid[slots] = True
+        self._free -= np.bincount(p, minlength=regions)
+        self._edge2slot = dict(zip(zip(src_o.tolist(), dst_o.tolist()), slots.tolist()))
+        self._rebuild_region_counts(0, regions, p, src_o, dst_o)
+        idx, ws, starts, ends = self._vertex_groups(np.concatenate([src_o, dst_o]))
+        sslots = np.concatenate([slots, slots])[idx].tolist()
+        self._incident = {
+            w: set(sslots[a:b]) for w, a, b in zip(ws, starts, ends)
+        }
 
     def _set_baseline(self) -> None:
         """Record the current normalized objective as 'fresh-GEO quality'.
@@ -224,6 +253,35 @@ class IncrementalOrderer:
         return self.region_vertex_sum() / max(1, self.num_vertices + self.num_edges + self._regions)
 
     # -------------------------------------------------------------- counters
+    @staticmethod
+    def _vertex_groups(verts: np.ndarray):
+        """Group a per-incidence vertex array: returns (idx, vertices, starts,
+        ends) where ``idx`` sorts the incidences by vertex and group g of the
+        sorted payload is ``[starts[g]:ends[g]]`` for ``vertices[g]`` — the
+        shared bulk-build step of ``_layout`` and ``_rewrite_span``'s
+        incident-set bookkeeping."""
+        if verts.size == 0:
+            return np.zeros(0, dtype=np.int64), [], [], []
+        idx = np.argsort(verts, kind="stable")
+        sv = verts[idx]
+        cut = np.flatnonzero(np.diff(sv)) + 1
+        starts = np.concatenate([[0], cut])
+        ends = np.concatenate([cut, [sv.size]])
+        return idx, sv[starts].tolist(), starts.tolist(), ends.tolist()
+
+    def _rebuild_region_counts(
+        self, base: int, regions: int, p: np.ndarray, src_o: np.ndarray, dst_o: np.ndarray
+    ) -> None:
+        """Region vertex counters for regions [base, base+regions) rebuilt
+        from their chunk assignment ``p`` — a region's counts are fully
+        determined by its chunk's endpoints."""
+        for ridx in range(regions):
+            sel = p == ridx
+            ids, cnt = np.unique(
+                np.concatenate([src_o[sel], dst_o[sel]]), return_counts=True
+            )
+            self._rc[base + ridx] = dict(zip(ids.tolist(), cnt.tolist()))
+
     def _count(self, region: int, vertex: int, d: int) -> None:
         rc = self._rc[region]
         n = rc.get(vertex, 0) + d
@@ -461,16 +519,42 @@ class IncrementalOrderer:
         return self.rf(k), oracle
 
     # ------------------------------------------------------------ escalation
-    def maybe_escalate(self) -> str:
-        """Quality-monitor step: 'none' | 'partial' | 'full' (what ran)."""
+    def escalation(self) -> str:
+        """The ladder DECISION only — 'none' | 'partial' | 'full' — so callers
+        owning a device mirror (``ingest.StreamingEngine``) can execute the
+        partial rung on-mesh instead of the host ``geo_order`` path.
+        Thresholds are strict: drift exactly at a threshold does not fire."""
         d = self.drift()
         if d > self.config.full_drift:
-            self.full_rebuild()
             return "full"
         if d > self.config.partial_drift:
-            self.partial_reorder()
             return "partial"
         return "none"
+
+    def maybe_escalate(self, partial_fn=None) -> str:
+        """Quality-monitor step: 'none' | 'partial' | 'full' (what ran).
+
+        ``partial_fn`` delegates the partial rung (the streaming engine passes
+        its on-device span repair; host-only replays pass the numpy mirror);
+        None keeps the host ``geo_order`` span repair. A fired partial starts
+        a ``config.partial_cooldown``-step hysteresis window during which
+        further partial triggers report 'none' (a just-repaired layout needs
+        fresh updates before repairing again pays for itself); the full rung
+        ignores the window and resets it."""
+        rung = self.escalation()
+        if rung == "full":
+            self.full_rebuild()
+            self._cooldown = 0
+        elif rung == "partial":
+            if self._cooldown > 0:
+                self._cooldown -= 1
+                return "none"
+            self._cooldown = self.config.partial_cooldown
+            if partial_fn is None:
+                self.partial_reorder()
+            else:
+                partial_fn()
+        return rung
 
     def worst_region(self) -> int:
         """Region with the highest vertex count per occupied slot — the most
@@ -482,6 +566,79 @@ class IncrementalOrderer:
             scores.append(len(self._rc[r]) / max(1, fill))
         return int(np.argmax(scores))
 
+    def span_bounds(self, region: Optional[int] = None) -> tuple[int, int]:
+        """[r0, r1) region range of the repair span anchored at ``region``
+        (default: the worst region), ``config.span_regions`` wide, clamped."""
+        w = self.worst_region() if region is None else int(region)
+        span = self.config.span_regions
+        r0 = max(0, min(w, self._regions - span))
+        r1 = min(self._regions, r0 + span)
+        return r0, r1
+
+    def span_arrays(self, r0: int, r1: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Copies of the span's (slot_src, slot_dst, slot_valid) slices —
+        the host view of what the device span-repair program reads from the
+        sharded pack_slots buffers (bit-identical by the mirror contract)."""
+        lo, hi = r0 * self._spr, r1 * self._spr
+        return (
+            self.slot_src[lo:hi].copy(),
+            self.slot_dst[lo:hi].copy(),
+            self.slot_valid[lo:hi].copy(),
+        )
+
+    def geo_span_candidate(
+        self, u: np.ndarray, v: np.ndarray, valid: np.ndarray, seed: int = 0
+    ) -> np.ndarray:
+        """Host ``geo_order`` of the span's live edges as a live-first slot
+        permutation — the span repair's quality ORACLE. The production device
+        rung never computes this; oracle / differential modes feed it to the
+        repair program as the candidate order."""
+        from ..kernels import span_reorder as SRK
+
+        live = np.flatnonzero(valid)
+        if live.size < 2:
+            return SRK.identity_candidate(valid)
+        sub = Graph.from_edges(
+            np.stack([u[live], v[live]], axis=1), self.num_vertices
+        )
+        sub_order = ordering.geo_order(sub, self.config.k_min, self.config.k_max, seed=seed)
+        # Map canonical sub edges back to span positions (slots hold unique
+        # canonical u < v pairs, so the mapping is a bijection).
+        pos = {
+            (int(a), int(b)): int(s_)
+            for s_, a, b in zip(live.tolist(), u[live].tolist(), v[live].tolist())
+        }
+        cand_live = np.asarray(
+            [pos[(int(a), int(b))] for a, b in zip(sub.src[sub_order], sub.dst[sub_order])],
+            dtype=np.int64,
+        )
+        return np.concatenate([cand_live, np.flatnonzero(~np.asarray(valid, bool))])
+
+    def apply_span_order(
+        self, r0: int, r1: int, order: np.ndarray, *, emit_ops: bool = True
+    ) -> int:
+        """Commit a live-first span permutation: splice the re-ordered edges
+        back over regions [r0, r1) (CEP chunks spread evenly — the exact
+        layout the device splice computes) and update all bookkeeping, so the
+        drift monitor needs no device readback. ``emit_ops=False`` is the
+        device-rung path: the repair program already rewrote the mesh rows, so
+        no slot ops must travel. Returns the number of edges re-ordered."""
+        lo, hi = r0 * self._spr, r1 * self._spr
+        u = self.slot_src[lo:hi].copy()
+        v = self.slot_dst[lo:hi].copy()
+        valid = self.slot_valid[lo:hi].copy()
+        n = int(valid.sum())
+        order = np.asarray(order, dtype=np.int64)
+        new_src = u[order[:n]]
+        new_dst = v[order[:n]]
+        self._rewrite_span(r0, r1, new_src, new_dst)
+        if emit_ops:
+            for s_ in range(lo, hi):
+                self._ops[s_] = SlotOp(
+                    s_, int(self.slot_src[s_]), int(self.slot_dst[s_]), bool(self.slot_valid[s_])
+                )
+        return n
+
     def partial_reorder(self, region: Optional[int] = None) -> int:
         """Bounded re-order of only the degraded span: GEO on the subgraph
         induced by ``span_regions`` consecutive regions' edges, spliced back
@@ -489,72 +646,124 @@ class IncrementalOrderer:
         rewrite is emitted as ordinary slot ops (one op per span slot), so the
         device mirror follows with the same scatter program ingest uses — no
         full re-upload; degrees are untouched (a re-order never changes the
-        graph)."""
-        w = self.worst_region() if region is None else int(region)
-        span = self.config.span_regions
-        r0 = max(0, min(w, self._regions - span))
-        r1 = min(self._regions, r0 + span)
-        lo, hi = r0 * self._spr, r1 * self._spr
-        slots = lo + np.flatnonzero(self.slot_valid[lo:hi])
-        if slots.size < 2:
+        graph). This is the HOST rung — the streaming engine's default runs
+        the repair on-mesh instead (``partial_reorder_mirror`` + the span
+        program of kernels/span_reorder.py)."""
+        r0, r1 = self.span_bounds(region)
+        u, v, valid = self.span_arrays(r0, r1)
+        if int(valid.sum()) < 2:
             return 0
-        src_s = self.slot_src[slots]
-        dst_s = self.slot_dst[slots]
-        sub = Graph.from_edges(np.stack([src_s, dst_s], axis=1), self.num_vertices)
-        sub_order = ordering.geo_order(sub, self.config.k_min, self.config.k_max, seed=0)
-        new_src = sub.src[sub_order].astype(np.int64)
-        new_dst = sub.dst[sub_order].astype(np.int64)
-        # Splice: rewrite the span's regions with the re-ordered edges spread
-        # evenly, leave everything outside [lo, hi) untouched.
-        self._rewrite_span(r0, r1, new_src, new_dst)
-        for s_ in range(lo, hi):
-            self._ops[s_] = SlotOp(
-                s_, int(self.slot_src[s_]), int(self.slot_dst[s_]), bool(self.slot_valid[s_])
-            )
-        return int(slots.size)
+        cand = self.geo_span_candidate(u, v, valid)
+        return self.apply_span_order(r0, r1, cand)
+
+    def partial_reorder_mirror(
+        self,
+        region: Optional[int] = None,
+        *,
+        candidate: Optional[np.ndarray] = None,
+        emit_ops: bool = True,
+    ) -> tuple[int, bool]:
+        """Partial rung via the numpy mirror of the DEVICE span repair
+        (kernels/span_reorder.py): neighbor-expansion order vs ``candidate``
+        (default: the current layout), better of the two by the exact span
+        objective. Returns (edges re-ordered, chose_candidate). Byte-identical
+        to what the on-mesh program writes — the differential-oracle
+        contract."""
+        from ..kernels import span_reorder as SRK
+
+        r0, r1 = self.span_bounds(region)
+        u, v, valid = self.span_arrays(r0, r1)
+        if int(valid.sum()) < 2:
+            return 0, False
+        if candidate is None:
+            candidate = SRK.identity_candidate(valid)
+        ks = SRK.eval_ks(self.config.k_min, self.config.k_max)
+        order, chose = SRK.select_span_order_host(
+            u, v, valid, self.num_vertices, candidate, ks
+        )
+        n = self.apply_span_order(r0, r1, order, emit_ops=emit_ops)
+        return n, chose
 
     def _rewrite_span(self, r0: int, r1: int, src_o: np.ndarray, dst_o: np.ndarray) -> None:
+        """Rewrite regions [r0, r1) with the span order (CEP chunks spread
+        evenly). Bookkeeping is vectorized on the partial-rung hot path: a
+        re-order rewrites the SAME edge multiset, so ``_edge2slot`` needs only
+        value updates (one C-level dict.update), region counters rebuild from
+        per-chunk ``np.unique``, and incident sets swap old↔new slots in
+        per-vertex bulk ops — this host pass rides along every device span
+        repair, so it must not cost what the repair saves."""
         spr = self._spr
         lo, hi = r0 * spr, r1 * spr
-        # Clear span bookkeeping.
-        old_slots = lo + np.flatnonzero(self.slot_valid[lo:hi])
-        for s_ in old_slots.tolist():
-            a, b = int(self.slot_src[s_]), int(self.slot_dst[s_])
-            region = s_ // spr
-            del self._edge2slot[(a, b)]
-            for w in (a, b):
-                inc = self._incident.get(w)
-                if inc is not None:
-                    inc.discard(s_)
-                    if not inc:
-                        del self._incident[w]
-                self._count(region, w, -1)
+        src_o = np.asarray(src_o, dtype=np.int64)
+        dst_o = np.asarray(dst_o, dtype=np.int64)
+        e = int(src_o.shape[0])
+        old_rel = np.flatnonzero(self.slot_valid[lo:hi])
+        old_slots = lo + old_rel
+        old_u = self.slot_src[old_slots].copy()
+        old_v = self.slot_dst[old_slots].copy()
+        same_edges = e == old_slots.size and np.array_equal(
+            np.sort(old_u * self.num_vertices + old_v),
+            np.sort(src_o * self.num_vertices + dst_o),
+        )
+        if not same_edges:
+            # General path (never hit by re-orders): old edges leave the maps.
+            for s_, a, b in zip(old_slots.tolist(), old_u.tolist(), old_v.tolist()):
+                del self._edge2slot[(a, b)]
+                for w in (a, b):
+                    inc = self._incident.get(w)
+                    if inc is not None:
+                        inc.discard(s_)
+                        if not inc:
+                            del self._incident[w]
         self.slot_valid[lo:hi] = False
         self.slot_src[lo:hi] = 0
         self.slot_dst[lo:hi] = 0
         self._free[r0:r1] = spr
         for r in range(r0, r1):  # bulk rewrite: rescan these regions lazily
             self._free_cache[r] = None
-        # Re-fill: CEP chunks of the span order over the span regions.
-        e = int(src_o.shape[0])
-        bounds = cep.chunk_bounds(e, r1 - r0)
-        for p in range(r1 - r0):
-            clo, chi = int(bounds[p]), int(bounds[p + 1])
-            n_p = chi - clo
-            if n_p == 0:
-                continue
-            cols = (np.arange(n_p, dtype=np.int64) * spr) // n_p
+        # Re-fill: CEP chunks of the span order over the span regions, slot
+        # targets computed in one closed-form vector pass (the exact layout
+        # kernels/span_reorder.splice_targets_device writes on the mesh).
+        regions = r1 - r0
+        if e:
+            j = np.arange(e, dtype=np.int64)
+            p = np.asarray(cep.id2p(e, regions, j), dtype=np.int64)
+            bounds = np.asarray(cep.chunk_bounds(e, regions), dtype=np.int64)
+            n_p = bounds[p + 1] - bounds[p]
+            cols = ((j - bounds[p]) * spr) // n_p
             slots = (r0 + p) * spr + cols
-            self.slot_src[slots] = src_o[clo:chi]
-            self.slot_dst[slots] = dst_o[clo:chi]
+            self.slot_src[slots] = src_o
+            self.slot_dst[slots] = dst_o
             self.slot_valid[slots] = True
-            self._free[r0 + p] -= n_p
-            for s_, a, b in zip(slots.tolist(), src_o[clo:chi].tolist(), dst_o[clo:chi].tolist()):
-                self._edge2slot[(a, b)] = s_
+            self._free[r0:r1] -= np.bincount(p, minlength=regions)
+            self._edge2slot.update(
+                zip(zip(src_o.tolist(), dst_o.tolist()), slots.tolist())
+            )
+        else:
+            p = np.zeros(0, dtype=np.int64)
+            slots = np.zeros(0, dtype=np.int64)
+        self._rebuild_region_counts(r0, regions, p, src_o, dst_o)
+        # Incident sets: swap each affected vertex's old span slots for its
+        # new ones in one difference/update pair per vertex.
+        if same_edges:
+            # Align old and new slots per EDGE: both keyed by (u, v); the
+            # edge multiset is identical, so sorting by edge key pairs them.
+            old_key = np.argsort(old_u * self.num_vertices + old_v, kind="stable")
+            new_key = np.argsort(src_o * self.num_vertices + dst_o, kind="stable")
+            edge_new_slot = np.empty(e, dtype=np.int64)
+            edge_new_slot[old_key] = slots[new_key]
+            idx, ws, starts, ends = self._vertex_groups(np.concatenate([old_u, old_v]))
+            # python-list slicing beats np.split's per-group view construction
+            olds_l = np.concatenate([old_slots, old_slots])[idx].tolist()
+            news_l = np.concatenate([edge_new_slot, edge_new_slot])[idx].tolist()
+            for w, g0, g1 in zip(ws, starts, ends):
+                inc = self._incident[w]
+                inc.difference_update(olds_l[g0:g1])
+                inc.update(news_l[g0:g1])
+        else:
+            for s_, a, b in zip(slots.tolist(), src_o.tolist(), dst_o.tolist()):
                 self._incident.setdefault(a, set()).add(s_)
                 self._incident.setdefault(b, set()).add(s_)
-                self._count(r0 + p, a, +1)
-                self._count(r0 + p, b, +1)
 
     def full_rebuild(self, seed: int = 0) -> None:
         """Escalation terminal: re-run geo_order on the current graph and

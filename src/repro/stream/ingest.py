@@ -4,9 +4,10 @@ The host ``IncrementalOrderer`` owns the ordered slot array; the
 ``StreamingEngine`` mirrors it on the mesh as a ``ShardedEngineData`` whose
 partition p holds region p's slots (``graphs/engine.py pack_slots`` layout:
 occupied slots keep their column, gaps are masked, one trailing scratch
-column). Two jitted device programs — cached in the same bounded
-``ProgramCache`` LRU as the migration programs of elastic/rescale_exec.py —
-keep the mirror current without ever re-packing from the host:
+column). Three jitted device program families — all in one bounded
+kind-prefixed ``ProgramCache`` LRU, the same container the migration programs
+of elastic/rescale_exec.py use — keep the mirror current without ever
+re-packing from the host:
 
 * **scatter** (ingest): each drained ``SlotOp`` becomes one (row, col) write
   of the edge values + mask bit, plus a scatter-add of the per-vertex degree
@@ -18,11 +19,27 @@ keep the mirror current without ever re-packing from the host:
   k_new output sharding — XLA's SPMD partitioner routes exactly the rows
   whose region changed devices as device-to-device transfers, so rescaling
   keeps its O(k)-plan character while the stream is live.
+* **span_repair** (partial re-order, the escalation ladder's middle rung):
+  one program reads the degraded span's live slots straight from the sharded
+  buffers, recomputes the span-local order (neighbor-expansion scoring with
+  exact-objective candidate selection — kernels/span_reorder.py), and writes
+  the repaired layout back as a single scatter over the span rows. The host
+  runs the byte-exact numpy mirror of the same algorithm to keep its slot
+  array and drift counters current, so the rung needs NO device round-trip
+  and no slot-op upload (``scatter_limit`` only governs the host-mode
+  fallback). Host ``geo_order`` on the extracted span is retained as the
+  oracle: ``span_repair="oracle"`` applies it verbatim on device
+  (bit-identical to the PR-3 host path), ``"differential"`` feeds it to the
+  candidate selection so the repair is never worse than GEO by construction.
 
-Bit-identity contract (DESIGN.md §9): after any sequence of ingests and
-rescales, ``unshard_engine_data(engine.data)`` equals the host-side
-``pack_slots`` oracle byte-for-byte (``verify_bit_identity``; asserted per
-step with ``verify=True``).
+All three program families live in ONE bounded ``ProgramCache`` LRU under
+kind-prefixed keys, so ``program_cache_size`` bounds every cached program of
+a long-lived engine.
+
+Bit-identity contract (DESIGN.md §9): after any sequence of ingests,
+rescales, and span repairs, ``unshard_engine_data(engine.data)`` equals the
+host-side ``pack_slots`` oracle byte-for-byte (``verify_bit_identity``;
+asserted per step with ``verify=True``).
 """
 from __future__ import annotations
 
@@ -41,6 +58,7 @@ from ..compat import donate_jit
 from ..core import cep
 from ..elastic.rescale_exec import EDGE_BYTES, ProgramCache
 from ..graphs import engine as graph_engine
+from ..kernels import span_reorder as SRK
 from ..launch import sharding as SH
 from .incremental import IncrementalOrderer
 from .updates import EdgeUpdateBatch
@@ -105,25 +123,50 @@ class StreamingEngine:
         mesh=None,
         *,
         donate: bool = True,
-        program_cache_size: int = 8,
+        program_cache_size: int = 24,
         scatter_limit: int = 1024,
+        span_repair: str = "device",
     ):
         if mesh is None:
             from ..launch import mesh as MM
 
             mesh = MM.make_graph_mesh(1)
+        if span_repair not in ("device", "host", "oracle", "differential"):
+            raise ValueError(f"unknown span_repair mode {span_repair!r}")
         self.orderer = orderer
         self.mesh = mesh
         self.donate = donate
-        # Above this many slot ops (a partial re-order's span rewrite), a full
-        # pack re-upload beats a giant scatter — on CPU meshes markedly so.
-        # Real accelerator meshes, where host→device uploads cross PCIe while
-        # the scatter stays device-local, should raise it.
+        # Above this many slot ops, a full pack re-upload beats a giant
+        # scatter — on CPU meshes markedly so. Only the HOST-mode partial rung
+        # still produces span-sized op batches; the device rung rewrites the
+        # span on-mesh and uploads nothing. Real accelerator meshes, where
+        # host→device uploads cross PCIe while the scatter stays device-local,
+        # should raise it.
         self.scatter_limit = int(scatter_limit)
-        self._scatter_programs = ProgramCache(program_cache_size)
-        self._compact_programs = ProgramCache(program_cache_size)
+        # Partial-rung implementation (DESIGN.md §9):
+        #   "device"       — on-mesh span repair + byte-exact host mirror
+        #   "host"         — PR-3 path: host geo_order + slot-op scatter
+        #   "oracle"       — host geo_order applied verbatim by the device
+        #                    program (bit-identical to "host"; the tests'
+        #                    apply-mode oracle)
+        #   "differential" — device repair with the geo_order oracle as the
+        #                    scored candidate (never worse than GEO)
+        self.span_repair = span_repair
+        # ONE kind-prefixed LRU for every program family (scatter / compact /
+        # span_repair), like ElasticRescaler's migrate+counts cache. The
+        # default is sized for the families SHARING it: several scatter
+        # op-capacity buckets per layout, one compact program per (k_old,
+        # k_new) pair of an oscillating controller, one span program per
+        # layout — an eviction of a warmed span program would put its
+        # recompile back inside the monitored escalation path.
+        self._programs = ProgramCache(program_cache_size)
+        # Per-rung escalation accounting, surfaced on IngestEvents.
+        self.rung_counts = {"none": 0, "partial": 0, "full": 0}
+        self.rung_s = {"none": 0.0, "partial": 0.0, "full": 0.0}
+        self.last_repair = ""  # what the last partial/full rung executed
         self.data = self._upload()
         orderer.needs_resync = False
+        self._warm_span_program()
 
     # ------------------------------------------------------------- plumbing
     @property
@@ -164,6 +207,39 @@ class StreamingEngine:
         self.orderer.drain_ops()  # ops predate the re-layout; drop them
         self.data = self._upload()
         self.orderer.needs_resync = False
+        self._warm_span_program()  # layout signature may have changed
+
+    def _warm_span_program(self) -> None:
+        """Trace + compile the span-repair program for the CURRENT layout
+        signature on throwaway buffers. Called at every layout change (init,
+        rescale, resync) so a partial escalation never pays the compile
+        inside the monitored stream path; a no-op when the signature is
+        already cached."""
+        if self.span_repair == "host":
+            return
+        o = self.orderer
+        s = min(o.config.span_regions, o.regions)
+        mode = {"oracle": "apply", "differential": "select"}.get(self.span_repair, "greedy")
+        e_cap = int(self.data.edges.shape[1])
+        key = self._span_key(mode, o.regions, self.data.k_pad, e_cap, s, self.mesh)
+        # get(), not `in`: a cache hit must refresh LRU recency, or a warmed
+        # span program idling between escalations becomes the eviction victim.
+        if self._programs.get(key) is not None:
+            return
+        program = self._span_program(mode, o.regions, self.data.k_pad, e_cap, s, self.mesh)
+        from ..launch import multihost as MH
+
+        s_edges, s_mask, _ = SH.engine_shardings(self.mesh)
+        dummy_e = MH.put_global(np.zeros(self.data.edges.shape, np.int32), s_edges)
+        dummy_m = MH.put_global(np.zeros(self.data.mask.shape, np.float32), s_mask)
+        out = program(
+            dummy_e,
+            dummy_m,
+            self._host_operand(np.arange(s, dtype=np.int32)),
+            self._host_operand(np.arange(s * (e_cap - 1), dtype=np.int32)),
+            self._host_operand(np.zeros(1, dtype=np.int32)),
+        )
+        jax.block_until_ready(out[0])
 
     def _sync_pending(self) -> None:
         """Bring the device mirror up to date with whatever the host orderer
@@ -264,7 +340,7 @@ class StreamingEngine:
 
     def _scatter_program(self, k_pad: int, e_cap: int, cap: int, mesh):
         key = ("scatter", k_pad, e_cap, cap, mesh)
-        cached = self._scatter_programs.get(key)
+        cached = self._programs.get(key)
         if cached is not None:
             return cached
 
@@ -284,7 +360,7 @@ class StreamingEngine:
             program = donate_jit(apply, donate_argnums=(0, 1, 2), **jit_kwargs)
         else:
             program = jax.jit(apply, **jit_kwargs)
-        return self._scatter_programs.put(key, program)
+        return self._programs.put(key, program)
 
     # -------------------------------------------------------------- rescale
     def rescale(self, k_new: int, *, verify: bool = False) -> StreamRescaleStats:
@@ -355,6 +431,10 @@ class StreamingEngine:
             num_edges=o.num_edges,
         )
         o.needs_resync = False
+        # The k_new layout is a new span-program signature: compile it here,
+        # inside the rescale's reported latency, not inside the first partial
+        # escalation of the new layout.
+        self._warm_span_program()
         jax.block_until_ready(self.data.edges)
         elapsed = time.perf_counter() - t0
         if verify:
@@ -373,7 +453,7 @@ class StreamingEngine:
         )
 
     def _compact_program(self, key):
-        cached = self._compact_programs.get(("compact",) + key)
+        cached = self._programs.get(("compact",) + key)
         if cached is not None:
             return cached
         mesh = key[-1]
@@ -389,17 +469,171 @@ class StreamingEngine:
             program = donate_jit(compact, donate_argnums=(0,), **jit_kwargs)
         else:
             program = jax.jit(compact, **jit_kwargs)
-        return self._compact_programs.put(("compact",) + key, program)
+        return self._programs.put(("compact",) + key, program)
 
     # ------------------------------------------------------------ escalation
     def monitor(self) -> str:
-        """Quality-monitor step of the escalation ladder: lets the orderer
-        escalate and brings the device mirror along — a partial span re-order
-        arrives as ordinary slot ops (one scatter), a full rebuild as a
-        resync. Returns 'none' | 'partial' | 'full'."""
-        escalation = self.orderer.maybe_escalate()
+        """Quality-monitor step of the escalation ladder. The ladder decision
+        stays in the orderer (``escalation()``); execution is delegated here
+        per rung: a partial span re-order runs as the cached on-mesh
+        span-repair program (mode ``span_repair``; host mode falls back to
+        slot-op scatter / re-upload under ``scatter_limit``), a full rebuild
+        as a resync. Per-rung counters and timings accumulate in
+        ``rung_counts`` / ``rung_s``. Returns 'none' | 'partial' | 'full'."""
+        t0 = time.perf_counter()
+        # Flush anything the host applied since the last sync FIRST: the span
+        # program reads the device buffers, which must mirror the host slots.
         self._sync_pending()
-        return escalation
+        rung = self.orderer.maybe_escalate(partial_fn=self._partial_rung)
+        if rung == "full":
+            self._resync()
+            self.last_repair = "resync"
+        elif rung == "none":
+            self.last_repair = ""
+        self.rung_counts[rung] += 1
+        self.rung_s[rung] += time.perf_counter() - t0
+        return rung
+
+    def _partial_rung(self) -> None:
+        """Execute the partial rung in the configured mode. Host bookkeeping
+        (slot array, drift counters) always advances through the orderer —
+        via the byte-exact numpy mirror for the device modes — so the monitor
+        needs no device readback."""
+        o = self.orderer
+        if self.span_repair == "host":
+            o.partial_reorder()  # slot ops picked up by _sync_pending below
+            self._sync_pending()
+            self.last_repair = "host"
+            return
+        r0, r1 = o.span_bounds()
+        u, v, valid = o.span_arrays(r0, r1)
+        if int(valid.sum()) < 2:
+            self.last_repair = "skipped"
+            return
+        if self.span_repair == "device":
+            cand = SRK.identity_candidate(valid)
+        else:  # "oracle" | "differential": host geo_order on the span
+            cand = o.geo_span_candidate(u, v, valid)
+        use_cand = False
+        if self.span_repair == "oracle":
+            o.apply_span_order(r0, r1, cand, emit_ops=False)
+        else:
+            _, use_cand = o.partial_reorder_mirror(
+                region=r0, candidate=cand, emit_ops=False
+            )
+        self._span_repair_device(r0, r1, cand, use_cand)
+        self.last_repair = self.span_repair
+
+    def _span_repair_device(
+        self, r0: int, r1: int, cand: np.ndarray, use_cand: bool
+    ) -> None:
+        """Run the cached span-repair program over regions [r0, r1): extract
+        the span's live slots from the sharded buffers, re-order, splice back
+        — one program, nothing read back (the host mirror already advanced
+        the slot array, so the call is left ASYNC and overlaps the next
+        batch's host placement). In the production mode the mirror's exact
+        candidate decision ships as a scalar operand; differential mode keeps
+        the whole selection — objectives included — on device."""
+        o = self.orderer
+        g = SH.graph_axis_size(self.mesh)
+        rows = np.asarray(
+            [SH.partition_row(p, o.regions, g) for p in range(r0, r1)], dtype=np.int32
+        )
+        mode = {"oracle": "apply", "differential": "select"}.get(self.span_repair, "greedy")
+        program = self._span_program(
+            mode, o.regions, self.data.k_pad, int(self.data.edges.shape[1]),
+            r1 - r0, self.mesh,
+        )
+        edges, mask = program(
+            self.data.edges,
+            self.data.mask,
+            self._host_operand(rows),
+            self._host_operand(np.asarray(cand, dtype=np.int32)),
+            # shape (1,), not 0-d: put_global's row-block math needs an axis
+            self._host_operand(np.asarray([1 if use_cand else 0], dtype=np.int32)),
+        )
+        # Block here so the rung's reported cost INCLUDES the device program
+        # (honest accounting: without this, async dispatch would push the
+        # repair's runtime into whatever next touches the buffers).
+        jax.block_until_ready(edges)
+        # Degrees untouched: a re-order never changes the graph.
+        self.data = dataclasses.replace(self.data, edges=edges, mask=mask)
+
+    def _span_key(self, mode: str, k: int, k_pad: int, e_cap: int, s: int, mesh):
+        ks = SRK.eval_ks(self.orderer.config.k_min, self.orderer.config.k_max)
+        # Pallas custom calls don't SPMD-partition: only single-device,
+        # single-process programs route the objective's distinct counting
+        # through the segment_rf boundary kernel (same integers either way).
+        use_pallas = SH.graph_axis_size(mesh) == 1 and compat.process_count() == 1
+        return ("span_repair", mode, k, k_pad, e_cap, s, ks, use_pallas, mesh)
+
+    def _span_program(self, mode: str, k: int, k_pad: int, e_cap: int, s: int, mesh):
+        """Span-repair program, cached per static signature: kind-prefixed in
+        the shared LRU; span length, k, and e_max changes all re-key.
+
+        Modes: ``greedy`` recomputes the expansion order on device and takes
+        the mirror's candidate decision as a scalar operand (production —
+        nothing travels device→host); ``select`` scores both orders on device
+        too (differential); ``apply`` applies the candidate verbatim (the
+        geo_order oracle)."""
+        spr = e_cap - 1
+        cap = s * spr
+        key = self._span_key(mode, k, k_pad, e_cap, s, mesh)
+        ks, use_pallas = key[6], key[7]
+        cached = self._programs.get(key)
+        if cached is not None:
+            return cached
+        num_vertices = self.num_vertices
+
+        def repair(edges, mask, rows, cand, use_cand):
+            blk_e = edges[rows]  # (s, e_cap, 2) — span rows only
+            blk_m = mask[rows]
+            u = blk_e[:, :spr, 0].reshape(cap)
+            v = blk_e[:, :spr, 1].reshape(cap)
+            valid = blk_m[:, :spr].reshape(cap) > 0
+            n = jnp.sum(valid.astype(jnp.int32))
+            if mode == "apply":
+                order = cand
+            elif mode == "select":
+                order = SRK.select_span_order_device(
+                    u, v, valid, num_vertices, cand, ks, use_pallas=use_pallas
+                )
+            else:
+                # greedy: the mirror's exact candidate decision arrives as an
+                # operand; lax.cond executes ONLY the taken branch, so when
+                # the current layout already scored best the program skips
+                # the expansion-order compute and is a pure gap re-spread.
+                order = jax.lax.cond(
+                    use_cand[0] > 0,
+                    lambda: cand,
+                    lambda: SRK.span_order_device(u, v, valid, num_vertices),
+                )
+            tgt = SRK.splice_targets_device(n, s, spr, cap)
+            j = jnp.arange(cap, dtype=jnp.int32)
+            live = j < n
+            new_u = jnp.zeros(cap + 1, jnp.int32).at[tgt].set(
+                jnp.where(live, u[order], 0)
+            )[:cap]
+            new_v = jnp.zeros(cap + 1, jnp.int32).at[tgt].set(
+                jnp.where(live, v[order], 0)
+            )[:cap]
+            new_m = jnp.zeros(cap + 1, jnp.float32).at[tgt].set(
+                live.astype(jnp.float32)
+            )[:cap]
+            blk = jnp.stack([new_u.reshape(s, spr), new_v.reshape(s, spr)], axis=-1)
+            blk = jnp.concatenate([blk, jnp.zeros((s, 1, 2), jnp.int32)], axis=1)
+            mblk = jnp.concatenate(
+                [new_m.reshape(s, spr), jnp.zeros((s, 1), jnp.float32)], axis=1
+            )
+            return edges.at[rows].set(blk), mask.at[rows].set(mblk)
+
+        s_edges, s_mask, _ = SH.engine_shardings(mesh)
+        jit_kwargs = {"out_shardings": (s_edges, s_mask)}
+        if self.donate:
+            program = donate_jit(repair, donate_argnums=(0, 1), **jit_kwargs)
+        else:
+            program = jax.jit(repair, **jit_kwargs)
+        return self._programs.put(key, program)
 
     def rf_vs_oracle(self, k: Optional[int] = None) -> tuple[float, float]:
         """(incremental RF, full geo_order re-run RF) at k (default: current

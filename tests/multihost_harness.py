@@ -46,12 +46,28 @@ from repro.graphs import engine as E  # noqa: E402
 from repro.launch import mesh as MM  # noqa: E402
 from repro.launch import sharding as SH  # noqa: E402
 from repro.stream import IncrementalOrderer, StreamingEngine, SyntheticStream  # noqa: E402
+from repro.stream.incremental import StreamConfig  # noqa: E402
 
 GRAPH_SCALE = 8
 GRAPH_EDGE_FACTOR = 6
 GRAPH_SEED = 0
 STREAM_SEED = 1
 STREAM_BATCH = 64
+
+
+def stream_config() -> StreamConfig:
+    """Stream phase config: a 2-region span so partial re-orders can move the
+    monitored objective, full rebuilds parked out of the way — the ISSUE-5
+    acceptance wants the DEVICE span-repair rung exercised across the process
+    boundary, not drowned by resync uploads."""
+    return StreamConfig(full_drift=99.0, span_regions=2)
+
+
+def force_partial_baseline(orderer: IncrementalOrderer) -> None:
+    """Pin drift ≈ 1.5 (> partial_drift, < full_drift) so every monitor step
+    deterministically fires the partial rung — the parent's host replay
+    applies the identical pin, keeping decisions byte-reproducible."""
+    orderer._baseline_kappa = orderer._kappa() / 1.5
 
 
 def log(pid: int, msg: str) -> None:
@@ -115,9 +131,12 @@ def run_rescale_phase(src, dst, num_vertices, mesh, store: dict) -> dict:
 
 
 def stream_script(ctl, stream, clock):
-    """The PR-3 rescale-under-ingest acceptance script, expressed once so the
-    parent test can replay the identical controller decisions host-side."""
+    """The PR-3 rescale-under-ingest acceptance script — now with the drift
+    baseline pinned so every ingest's monitor fires the PARTIAL rung (the
+    ISSUE-5 device span repair) — expressed once so the parent test can
+    replay the identical controller decisions host-side."""
     ctl.ingest(stream.batch())
+    ctl.ingest(stream.batch())  # partial re-orders around the scale-out …
     ctl.add_hosts(4)  # 8 -> 12 under ingest
     ctl.ingest(stream.batch())
     clock[0] = 1.0
@@ -125,15 +144,18 @@ def stream_script(ctl, stream, clock):
         ctl.heartbeat(h, 1)
     clock[0] = 6.0
     ctl.poll()  # 5 silent hosts preempted: 12 -> 7
+    ctl.ingest(stream.batch())  # … and after the preemption
     ctl.ingest(stream.batch())
 
 
 def run_stream_phase(g, src, dst, mesh, store: dict) -> dict:
     pid = jax.process_index()
     o = IncrementalOrderer(
-        src.astype(np.int64), dst.astype(np.int64), g.num_vertices, regions=8
+        src.astype(np.int64), dst.astype(np.int64), g.num_vertices,
+        regions=8, config=stream_config(),
     )
-    eng = StreamingEngine(o, mesh)
+    force_partial_baseline(o)
+    eng = StreamingEngine(o, mesh)  # span_repair="device": the rung under test
     clock = [0.0]
     ctl = ec.ElasticController(8, dead_after_s=5.0, clock=lambda: clock[0])
     ctl.attach_stream(eng)
@@ -153,10 +175,16 @@ def run_stream_phase(g, src, dst, mesh, store: dict) -> dict:
             "executed": getattr(ev, "executed", None),
             "cross_process_bytes": getattr(ev, "cross_process_bytes", None),
             "escalation": getattr(ev, "escalation", None),
+            "repair": getattr(ev, "repair", None),
         }
         for ev in ctl.events
     ]
-    return {"k_final": eng.k, "num_edges": o.num_edges, "events": events}
+    return {
+        "k_final": eng.k,
+        "num_edges": o.num_edges,
+        "events": events,
+        "rung_counts": eng.rung_counts,
+    }
 
 
 def main() -> None:

@@ -122,10 +122,17 @@ def expected_global_pack(src, dst, num_vertices: int, k: int, g: int):
 class _HostReplayStream:
     """Minimal StreamingEngine protocol over a bare IncrementalOrderer, so the
     harness's controller script replays host-side with the exact decision
-    sequence but no devices — the parent's oracle for the stream phase."""
+    sequence but no devices — the parent's oracle for the stream phase. The
+    partial rung runs the numpy MIRROR of the device span repair
+    (kernels/span_reorder.py), byte-identical to what the cluster's on-mesh
+    program wrote; rescale stats are recomputed from the gather-map overlay
+    and the cluster's reported partition→process map, so cross_process_bytes
+    can be checked plan-exact without trusting the thing under test."""
 
-    def __init__(self, orderer):
+    def __init__(self, orderer, g_devices: int | None = None, pmap=None):
         self.o = orderer
+        self.g_devices = g_devices
+        self.pmap = None if pmap is None else np.asarray(pmap)
 
     @property
     def k(self) -> int:
@@ -142,34 +149,55 @@ class _HostReplayStream:
         )
 
     def monitor(self) -> str:
-        esc = self.o.maybe_escalate()
+        esc = self.o.maybe_escalate(
+            partial_fn=lambda: self.o.partial_reorder_mirror(emit_ops=False)
+        )
         self.o.needs_resync = False
         self.o.drain_ops()
         return esc
 
     def rescale(self, k_new: int) -> StreamRescaleStats:
-        k_old = self.o.regions
+        k_old, spr_old = self.o.regions, self.o.slots_per_region
         self.o.relayout(int(k_new))
-        self.o.drain_gather_map()
+        gm = self.o.drain_gather_map()
         self.o.needs_resync = False
+        spr_new = self.o.slots_per_region
+        new_slots = np.flatnonzero(gm >= 0)
+        old_slots = gm[new_slots]
+        new_regions = new_slots // spr_new
+        old_regions = old_slots // spr_old
+        moved = int(np.count_nonzero(new_regions != old_regions))
+        cross = xproc = 0
+        if self.g_devices is not None:
+            g = self.g_devices
+            changed = new_regions != old_regions
+            cross = int(np.count_nonzero(changed & (new_regions % g != old_regions % g)))
+            if self.pmap is not None:
+                xproc = int(np.count_nonzero(
+                    changed & (self.pmap[new_regions % g] != self.pmap[old_regions % g])
+                ))
         return StreamRescaleStats(
             k_old=k_old, k_new=int(k_new), num_edges=self.o.num_edges,
-            moved_edges=0, cep_plan_edges=0, cross_device_edges=0,
-            cross_device_bytes=0, elapsed_s=0.0,
+            moved_edges=moved, cep_plan_edges=0, cross_device_edges=cross,
+            cross_device_bytes=cross * EDGE_BYTES, elapsed_s=0.0,
+            cross_process_edges=xproc, cross_process_bytes=xproc * EDGE_BYTES,
         )
 
 
-def replay_stream_oracle(g, src, dst):
+def replay_stream_oracle(g, src, dst, pmap=None):
     """Replay the harness's controller script on the host only; returns the
-    final orderer (its slot arrays are the byte oracle)."""
+    final orderer (its slot arrays are the byte oracle) + the controller
+    (its event log carries the independently recomputed rescale traffic)."""
     from repro.elastic import controller as ec
 
     o = IncrementalOrderer(
-        src.astype(np.int64), dst.astype(np.int64), g.num_vertices, regions=8
+        src.astype(np.int64), dst.astype(np.int64), g.num_vertices,
+        regions=8, config=H.stream_config(),
     )
+    H.force_partial_baseline(o)
     clock = [0.0]
     ctl = ec.ElasticController(8, dead_after_s=5.0, clock=lambda: clock[0])
-    ctl.attach_stream(_HostReplayStream(o))
+    ctl.attach_stream(_HostReplayStream(o, g_devices=G_DEVICES, pmap=pmap))
     stream = SyntheticStream(g, batch_size=H.STREAM_BATCH, seed=H.STREAM_SEED)
     H.stream_script(ctl, stream, clock)
     return o, ctl
@@ -246,7 +274,7 @@ def test_stream_acceptance_matches_host_replay_oracle(cluster):
     replay of the same controller script, byte for byte."""
     records, shards = cluster
     g, src, dst = H.build_ordered()
-    o, ctl = replay_stream_oracle(g, src, dst)
+    o, ctl = replay_stream_oracle(g, src, dst, pmap=records[0]["device_process_map"])
     assert o.regions == records[0]["stream"]["k_final"] == 7
     assert o.num_edges == records[0]["stream"]["num_edges"]
 
@@ -281,3 +309,38 @@ def test_stream_events_ordered_and_consistent_across_processes(cluster):
             if e["kind"] in ("scale_out", "scale_in"):
                 assert e["executed"] is True
                 assert e["cross_process_bytes"] is not None and e["cross_process_bytes"] >= 0
+
+
+def test_stream_partial_escalations_ran_on_device_and_match_replay(cluster):
+    """ISSUE-5 satellite: the stream forced partial escalations on the
+    2-process cluster — every ingest fired the DEVICE span-repair rung — and
+    the host replay's ladder decisions and rescale traffic agree event for
+    event, with stream-rescale cross_process_bytes plan-exact against the
+    gather-map overlay recomputed here."""
+    records, _ = cluster
+    g, src, dst = H.build_ordered()
+    _, ctl = replay_stream_oracle(g, src, dst, pmap=records[0]["device_process_map"])
+    want = [
+        {
+            "kind": ev.kind,
+            "escalation": getattr(ev, "escalation", None),
+            "cross_process_bytes": getattr(ev, "cross_process_bytes", None),
+        }
+        for ev in ctl.events
+    ]
+    for rec in records:
+        evs = rec["stream"]["events"]
+        assert len(evs) == len(want)
+        ingests = [e for e in evs if e["kind"] == "ingest"]
+        assert ingests and all(e["escalation"] == "partial" for e in ingests)
+        assert all(e["repair"] == "device" for e in ingests)
+        assert rec["stream"]["rung_counts"]["partial"] == len(ingests)
+        for got, w in zip(evs, want):
+            assert got["kind"] == w["kind"]
+            assert got["escalation"] == w["escalation"]
+            if got["kind"] in ("scale_out", "scale_in"):
+                # The NIC bill the cluster reported == the bill recomputed
+                # from the host replay's own gather map and the reported
+                # partition→process map.
+                assert got["cross_process_bytes"] == w["cross_process_bytes"]
+                assert w["cross_process_bytes"] > 0  # 2×4 really crossed the NIC

@@ -177,15 +177,16 @@ def test_program_cache_is_lru_bounded(ordered):
         r.rescale(data, k_new, verify=True)
     assert len(r._programs) == 2
     # (4, 5) was evicted (LRU); re-executing it retraces and still verifies.
+    # Keys are kind-prefixed: ("migrate", n, k_old, k_new, mesh).
     keys = list(r._programs)
-    assert all(key[1:3] != (4, 5) for key in keys)
+    assert all(key[0] == "migrate" and key[2:4] != (4, 5) for key in keys)
     data = E.pack_ordered(src, dst, g.num_vertices, 4)
     _, stats = r.rescale(data, 5, verify=True)
     assert stats.oracle_checked and len(r._programs) == 2
     # A cache hit refreshes recency instead of evicting.
     data = E.pack_ordered(src, dst, g.num_vertices, 4)
     r.rescale(data, 5)
-    assert len(r._programs) == 2 and list(r._programs)[-1][1:3] == (4, 5)
+    assert len(r._programs) == 2 and list(r._programs)[-1][2:4] == (4, 5)
 
 
 def test_program_cache_size_validation():

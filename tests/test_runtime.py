@@ -177,8 +177,58 @@ def test_program_cache_resize_has_no_stale_reuse():
     d2, _ = r2.rescale(E.pack_ordered(src, dst, 64, 4), 5)
     r2.rescale(d2, 6)
     assert len(r2._programs) == 1  # new capacity enforced immediately
-    assert list(r2._programs)[0][1:3] == (5, 6)  # only the latest program kept
+    assert list(r2._programs)[0][2:4] == (5, 6)  # only the latest program kept
     assert len(r1._programs) == 3  # and the old instance is untouched
+
+
+def test_program_cache_span_repair_kind_coexists_and_rekeys():
+    """ISSUE-5 satellite: the span-repair programs live in the SAME bounded
+    LRU as the streaming engine's scatter/compact programs under a kind
+    prefix, and changes to span length, k, or e_max each produce a fresh key
+    (no stale program reuse)."""
+    from repro.core import ordering
+    from repro.core.graph import rmat_graph
+    from repro.launch import mesh as MM
+    from repro.stream import IncrementalOrderer, StreamingEngine, SyntheticStream
+    from repro.stream.incremental import StreamConfig
+
+    g = rmat_graph(6, 4, seed=2)
+    order = ordering.geo_order(g, seed=0)
+    o = IncrementalOrderer(
+        g.src[order].astype(np.int64), g.dst[order].astype(np.int64),
+        g.num_vertices, regions=4,
+        config=StreamConfig(partial_drift=1.0, full_drift=99.0, span_regions=2),
+    )
+    o._baseline_kappa = o._kappa() / 1.5  # monitor always fires 'partial'
+    eng = StreamingEngine(o, MM.make_graph_mesh(1), program_cache_size=16)
+    stream = SyntheticStream(g, batch_size=24, seed=3)
+
+    def span_keys():
+        return [k for k in eng._programs if k[0] == "span_repair"]
+
+    eng.ingest(stream.batch(), verify=True)  # scatter program
+    eng.monitor()  # span program #1 (k=4, e_cap_0, s=2)
+    assert {k[0] for k in eng._programs} == {"scatter", "span_repair"}
+    k1 = span_keys()[-1]
+    eng.monitor()
+    assert len(span_keys()) == 1  # same signature → cache hit, no retrace
+    eng.rescale(6, verify=True)  # compact program; k and e_cap both change
+    eng.monitor()
+    assert {k[0] for k in eng._programs} == {"scatter", "span_repair", "compact"}
+    k2 = span_keys()[-1]
+    assert k2 != k1 and k2[2] == 6 and k1[2] == 4  # k re-keys
+    o.grow()  # e_max changes at the same k
+    eng._resync()
+    eng.monitor()
+    k3 = span_keys()[-1]
+    assert k3 != k2 and k3[4] > k2[4]  # e_cap re-keys
+    # Span length re-keys: a 1-region span at the same k / e_cap.
+    o.config = StreamConfig(partial_drift=1.0, full_drift=99.0, span_regions=1)
+    eng.monitor()
+    k4 = span_keys()[-1]
+    assert k4 != k3 and k4[5] == 1 and k3[5] == 2
+    eng.verify_bit_identity()  # none of the re-keyed programs went stale
+    assert len(span_keys()) == 4  # all four coexist in the one LRU
 
 
 def test_program_cache_hits_shared_across_rescale_kinds():

@@ -146,17 +146,24 @@ def test_orderer_locality_placement_beats_append(ordered):
 
 
 def test_orderer_grow_on_overflow(ordered):
+    """Inserting past the slot array's free capacity (bucketed slack included
+    — slots_per_region is 256-aligned with growth headroom) must grow it in
+    place without losing edges."""
     g, src, dst = ordered
     o = IncrementalOrderer(
         src, dst, g.num_vertices, regions=2, config=StreamConfig(slack=0.05)
     )
     spr0 = o.slots_per_region
+    free0 = int(o.capacity - o.num_edges)
     rng = np.random.default_rng(0)
     new = []
-    while len(new) < int(0.2 * g.num_edges):
+    existing = {(int(a), int(b)) for a, b in zip(src, dst)}
+    while len(new) <= free0:  # one past capacity forces the grow
         u, v = int(rng.integers(0, g.num_vertices)), int(rng.integers(0, g.num_vertices))
-        if u != v and (min(u, v), max(u, v)) not in new:
-            new.append((min(u, v), max(u, v)))
+        e = (min(u, v), max(u, v))
+        if u != v and e not in existing:
+            existing.add(e)
+            new.append(e)
     o.apply(EdgeUpdateBatch(insert=np.array(new), delete=np.zeros((0, 2))))
     assert o.slots_per_region > spr0 and o.needs_resync
     s, d = o.snapshot()
@@ -282,7 +289,233 @@ def test_objective_properties_deterministic(seed, k):
     _check_incremental_placement_never_worse_than_append(seed, min(k, 5))
 
 
-# ------------------------------------------------------------ ingest engine
+# --------------------------------------- device span repair (ISSUE-5 tentpole)
+def _degraded_orderer(seed, regions=4, span_regions=1, delta=None, scale=5):
+    """Randomized graph + randomized degradation: the span-repair property
+    fixtures. Returns the orderer after cross-community noise inserts."""
+    g = rmat_graph(scale, 4, seed=seed)
+    order = ordering.geo_order(g, seed=seed)
+    cfg = StreamConfig(span_regions=span_regions, delta=delta)
+    o = IncrementalOrderer(
+        g.src[order].astype(np.int64), g.dst[order].astype(np.int64),
+        g.num_vertices, regions=regions, config=cfg,
+    )
+    rng = np.random.default_rng(seed + 1)
+    new = set()
+    while len(new) < 25:
+        u, v = sorted(rng.integers(0, g.num_vertices, 2).tolist())
+        if u != v and (u, v) not in new:
+            new.add((u, v))
+    o.apply(EdgeUpdateBatch(insert=np.array(sorted(new)), delete=np.zeros((0, 2))))
+    o.drain_ops()
+    return g, o
+
+
+def _check_span_repair_never_worse_than_geo(seed, span_regions, delta):
+    """Satellite 1: for randomized graphs, spans, and δ windows, the span
+    repair's resulting objective is never worse than the host geo_order span
+    oracle (geo fed to the candidate selection), never worse than the current
+    layout (production identity candidate), and the device program computes
+    the byte-identical permutation to the host mirror."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import span_reorder as SRK
+
+    g, o = _degraded_orderer(seed, span_regions=span_regions, delta=delta)
+    r0, r1 = o.span_bounds()
+    u, v, valid = o.span_arrays(r0, r1)
+    assert valid.sum() >= 2
+    ks = SRK.eval_ks(o.config.k_min, o.config.k_max)
+    ident = SRK.identity_candidate(valid)
+    geo = o.geo_span_candidate(u, v, valid)
+
+    def obj(order):
+        return SRK.span_objective_host(u, v, valid, order, ks)
+
+    sel_geo, _ = SRK.select_span_order_host(u, v, valid, g.num_vertices, geo, ks)
+    assert obj(sel_geo) <= obj(geo)  # never worse than the geo span oracle
+    sel_id, _ = SRK.select_span_order_host(u, v, valid, g.num_vertices, ident, ks)
+    assert obj(sel_id) <= obj(ident)  # production: never worse than current
+    # Differential oracle: the traced program picks the identical permutation.
+    dev = np.asarray(
+        jax.jit(
+            lambda a, b, c, d: SRK.select_span_order_device(
+                a, b, c, g.num_vertices, d, ks, use_pallas=True
+            )
+        )(
+            jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32),
+            jnp.asarray(valid), jnp.asarray(geo, jnp.int32),
+        )
+    )
+    np.testing.assert_array_equal(dev, sel_geo)
+
+
+@given(seed=st.integers(0, 12), span=st.integers(1, 3), delta=st.sampled_from([None, 16, 64]))
+@settings(max_examples=10, deadline=None)
+def test_span_repair_never_worse_than_geo_oracle(seed, span, delta):
+    _check_span_repair_never_worse_than_geo(seed, span, delta)
+
+
+@pytest.mark.parametrize("seed,span,delta", [(0, 1, None), (1, 2, 16), (2, 3, 64), (5, 2, None)])
+def test_span_repair_never_worse_deterministic(seed, span, delta):
+    """Deterministic fallback (conftest hypothesis shim skips @given without
+    hypothesis)."""
+    _check_span_repair_never_worse_than_geo(seed, span, delta)
+
+
+def _force_partial_engine(mode, seed=7, span_regions=2):
+    g, o = _degraded_orderer(seed, span_regions=span_regions, scale=6)
+    # Thresholds pinned so the monitor fires the partial rung every batch and
+    # never escalates to full — the rung under test.
+    o.config = StreamConfig(partial_drift=1.0, full_drift=99.0, span_regions=span_regions)
+    o._baseline_kappa = o._kappa() / 1.5  # drift == 1.5 > partial, < full
+    return g, o, StreamingEngine(o, MM.make_graph_mesh(1), span_repair=mode)
+
+
+def test_span_repair_oracle_mode_bit_identical_to_host_path():
+    """Satellite 1, second clause: in oracle mode the device program applies
+    the host geo span order verbatim — buffers byte-identical to the PR-3
+    host path on the same stream."""
+    packs = {}
+    for mode in ("oracle", "host"):
+        g, o, eng = _force_partial_engine(mode)
+        stream = SyntheticStream(g, batch_size=32, seed=11)
+        for _ in range(3):
+            eng.ingest(stream.batch(), verify=True)
+            assert eng.monitor() == "partial"
+            eng.verify_bit_identity()
+        packs[mode] = E.unshard_engine_data(eng.data)
+    for field in ("edges", "mask", "degrees"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(packs["oracle"], field)),
+            np.asarray(getattr(packs["host"], field)),
+        )
+
+
+def test_span_repair_device_mode_matches_mirror_over_stream():
+    """Production device rung: repairs land on the mesh while the host mirror
+    advances the slot array — byte-identical after every event, including
+    around a rescale that re-keys the span program."""
+    g, o, eng = _force_partial_engine("device")
+    stream = SyntheticStream(g, batch_size=32, seed=13)
+    for b in range(5):
+        if b == 3:
+            eng.rescale(6, verify=True)
+        eng.ingest(stream.batch(), verify=True)
+        assert eng.monitor() == "partial"
+        eng.verify_bit_identity()
+    assert eng.last_repair == "device"
+    assert eng.rung_counts["partial"] == 5 and eng.rung_s["partial"] > 0
+
+
+def test_span_repair_differential_mode_never_worse_than_geo_end_to_end():
+    g, o, eng = _force_partial_engine("differential")
+    stream = SyntheticStream(g, batch_size=32, seed=17)
+    for _ in range(3):
+        eng.ingest(stream.batch(), verify=True)
+        assert eng.monitor() == "partial"
+        eng.verify_bit_identity()
+    assert eng.last_repair == "differential"
+
+
+def test_span_repair_skips_tiny_spans():
+    """A span with <2 live edges must not launch the device program."""
+    src = np.array([0, 2], dtype=np.int64)
+    dst = np.array([1, 3], dtype=np.int64)
+    o = IncrementalOrderer(src, dst, 8, regions=2)
+    eng = StreamingEngine(o, MM.make_graph_mesh(1))
+    o.apply(EdgeUpdateBatch(insert=np.zeros((0, 2)), delete=np.array([[0, 1]])))
+    eng._sync_pending()
+    o.drift = lambda: 1.05  # force the partial rung
+    assert eng.monitor() == "partial"
+    assert eng.last_repair == "skipped"
+    eng.verify_bit_identity()
+
+
+# ------------------------------------------- escalation ladder (satellite 2)
+def test_escalation_rung_selection_at_exact_thresholds(ordered):
+    """Thresholds are strict: drift exactly at a threshold does not fire."""
+    g, o = make_orderer(ordered)
+    cfg = o.config
+    for drift, want in [
+        (1.0, "none"),
+        (cfg.partial_drift, "none"),  # exactly at the partial threshold
+        (np.nextafter(cfg.partial_drift, 2.0), "partial"),
+        (cfg.full_drift, "partial"),  # exactly at the full threshold
+        (np.nextafter(cfg.full_drift, 2.0), "full"),
+        (cfg.full_drift * 2, "full"),
+    ]:
+        o.drift = lambda d=drift: d  # instance attr shadows the method
+        assert o.escalation() == want, f"drift={drift}"
+    del o.drift
+
+
+def test_maybe_escalate_delegates_partial_rung(ordered):
+    g, o = make_orderer(ordered)
+    o.drift = lambda: o.config.partial_drift + 0.01
+    ran = []
+    before = o.slot_src.copy()
+    assert o.maybe_escalate(partial_fn=lambda: ran.append(1)) == "partial"
+    assert ran == [1]
+    np.testing.assert_array_equal(o.slot_src, before)  # delegate owned the work
+    del o.drift
+
+
+def test_partial_cooldown_hysteresis(ordered):
+    """A fired partial opens a partial_cooldown window reporting 'none'; the
+    full rung ignores the window and resets it."""
+    g, o = make_orderer(ordered, partial_cooldown=2)
+    o.drift = lambda: o.config.partial_drift + 0.01
+    ran = []
+    fn = lambda: ran.append(1)
+    assert o.maybe_escalate(partial_fn=fn) == "partial"  # fires, opens window
+    assert o.maybe_escalate(partial_fn=fn) == "none"  # cooling (2 left)
+    assert o.maybe_escalate(partial_fn=fn) == "none"  # cooling (1 left)
+    assert o.maybe_escalate(partial_fn=fn) == "partial"  # window closed
+    assert len(ran) == 2
+    o.drift = lambda: o.config.full_drift + 0.01
+    assert o.maybe_escalate(partial_fn=fn) == "full"  # ignores + resets window
+    o.drift = lambda: o.config.partial_drift + 0.01
+    assert o.maybe_escalate(partial_fn=fn) == "partial"  # no leftover cooldown
+    assert len(ran) == 3
+    del o.drift
+
+
+def test_drift_carried_across_relayouts_reset_only_by_full_rebuild(ordered):
+    g, o = make_orderer(ordered)
+    stream = SyntheticStream(g, batch_size=64, seed=21)
+    for _ in range(4):
+        o.apply(stream.batch())
+    d0 = o.drift()
+    assert d0 != 1.0
+    o.relayout(6)  # rescale under ingest: drift VALUE carried across k change
+    assert o.drift() == pytest.approx(d0, rel=1e-9)
+    o.grow()  # slot-array growth: carried too
+    assert o.drift() == pytest.approx(d0, rel=1e-9)
+    o.full_rebuild()  # only a full rebuild moves the yardstick
+    assert o.drift() == pytest.approx(1.0, abs=1e-9)
+
+
+def test_per_rung_counters_and_timings_recorded_on_ingest_events(ordered):
+    g, src, dst = ordered
+    o = IncrementalOrderer(
+        src, dst, g.num_vertices, regions=4,
+        config=StreamConfig(partial_drift=1.0, full_drift=99.0, span_regions=2),
+    )
+    o._baseline_kappa = o._kappa() / 1.5  # every monitor fires 'partial'
+    eng = StreamingEngine(o, MM.make_graph_mesh(1))
+    ctl = ec.ElasticController(4)
+    ctl.attach_stream(eng)
+    stream = SyntheticStream(g, batch_size=32, seed=23)
+    events = [ctl.ingest(stream.batch()) for _ in range(3)]
+    for i, ev in enumerate(events):
+        assert ev.escalation == "partial" and ev.repair == "device"
+        assert ev.rung_count == i + 1  # cumulative firings of this rung
+        assert ev.monitor_s > 0 and ev.rung_total_s > 0
+    assert events[-1].rung_total_s >= events[0].rung_total_s
+    assert eng.rung_counts == {"none": 0, "partial": 3, "full": 0}
+    assert sum(eng.rung_counts.values()) == len(events)
 def test_streaming_engine_bit_identity_through_stream_and_rescales(ordered):
     """Small-scale version of the acceptance: ingest batches with two
     interleaved rescales; the sharded pack stays bit-identical to the host

@@ -91,6 +91,51 @@ def test_sharded_rescale_under_ingest_with_cross_device_accounting(ordered, mesh
     )
 
 
+def test_sharded_device_span_repair_bit_identical_over_stream(ordered, mesh):
+    """ISSUE-5 satellite (sharded variant): the on-mesh span-repair program —
+    jnp objective path, since Pallas is gated off on multi-device meshes —
+    stays byte-identical to the host mirror across forced partial escalations
+    and a rescale that re-keys the program."""
+    from repro.stream.incremental import StreamConfig
+
+    g, src, dst = ordered
+    o = IncrementalOrderer(
+        src, dst, g.num_vertices, regions=8,
+        config=StreamConfig(partial_drift=1.0, full_drift=99.0, span_regions=2),
+    )
+    o._baseline_kappa = o._kappa() / 1.5  # every monitor fires 'partial'
+    eng = StreamingEngine(o, mesh, span_repair="device")
+    stream = SyntheticStream(g, batch_size=64, seed=5)
+    for b in range(4):
+        if b == 2:
+            eng.rescale(12, verify=True)
+        eng.ingest(stream.batch(), verify=True)
+        assert eng.monitor() == "partial" and eng.last_repair == "device"
+        eng.verify_bit_identity()
+    assert eng.rung_counts["partial"] == 4
+    keys = [k for k in eng._programs if k[0] == "span_repair"]
+    assert keys and all(k[7] is False for k in keys)  # use_pallas gated off
+
+
+def test_sharded_differential_span_repair_never_worse_than_geo(ordered, mesh):
+    """Sharded differential mode: geo candidate scored on device, result
+    byte-identical to the host mirror's selection."""
+    from repro.stream.incremental import StreamConfig
+
+    g, src, dst = ordered
+    o = IncrementalOrderer(
+        src, dst, g.num_vertices, regions=8,
+        config=StreamConfig(partial_drift=1.0, full_drift=99.0, span_regions=2),
+    )
+    o._baseline_kappa = o._kappa() / 1.5
+    eng = StreamingEngine(o, mesh, span_repair="differential")
+    stream = SyntheticStream(g, batch_size=64, seed=6)
+    for _ in range(2):
+        eng.ingest(stream.batch(), verify=True)
+        assert eng.monitor() == "partial"
+        eng.verify_bit_identity()
+
+
 def test_sharded_escalation_resync_stays_bit_identical(ordered, mesh):
     g, src, dst = ordered
     o = IncrementalOrderer(src, dst, g.num_vertices, regions=8)
