@@ -1,31 +1,43 @@
-"""Streaming-graph subsystem benchmark — the ISSUE-3/ISSUE-5 acceptance.
+"""Streaming-graph subsystem benchmark — the ISSUE-3/5/6 acceptance.
 
 Runs a ≥10k-update synthetic stream over a GEO-ordered RMAT base graph with
 two rescales interleaved (k → k+x → k−y), all through the elastic controller
-(ingest events + scale events on one seq-ordered log), with the partial
-re-order rung executing ON-DEVICE (the ISSUE-5 tentpole: the cached
-span-repair program of kernels/span_reorder.py, host bookkeeping via its
-byte-exact numpy mirror). Records in ``BENCH_stream.json``:
+(ingest events + scale events + rebuild events on one seq-ordered log), with
+the partial re-order rung executing ON-DEVICE (ISSUE-5: the cached
+span-repair program of kernels/span_reorder.py) and the full-rebuild rung
+running ASYNCHRONOUSLY against shadow buffers (the ISSUE-6 tentpole:
+dispatch → ``rebuild_flight`` batches of overlapped ingest → commit + delta
+splice, DESIGN.md §11). Records in ``BENCH_stream.json``:
 
 * ``ingest``      — per-batch on-device ingest latency (median/p90) and
                     edges/s, vs the cost of a full geo_order re-run
                     (acceptance: ingest ≥ 10× cheaper);
 * ``amortized``   — the full per-batch wall time including the quality
                     monitor's escalations, with per-rung counts and costs.
-                    ISSUE-5 acceptance: mean batch wall ≤ 3× the ingest-only
-                    median — the device rung must not dominate the stream;
+                    ISSUE-6 acceptance: mean batch wall ≤ 3× the ingest-only
+                    median (``issue_target_within_3x_ingest`` is COMPUTED
+                    from these numbers and asserted, in --smoke runs too);
+* ``full_rung``   — async rebuild accounting: dispatch/commit cost, replayed
+                    delta batches, splice ops, and the proof that no commit
+                    blocked ingest for more than its one batch;
+* ``program_cache`` — per-kind hit/miss/eviction counters walked across the
+                    event log: the escalation program kinds (span_repair /
+                    full_reorder / splice) must show ZERO misses inside the
+                    monitored stream — escalations never pay a compile;
 * ``partial_rung``— device span-repair cost vs the host geo_order span repair
-                    measured on the same final state, same machine
                     (acceptance: ≥ 5× cheaper; PR-3 recorded ~51 ms/partial);
 * ``quality``     — RF of the incremental order vs a full-GEO oracle re-run
                     at every checkpoint (acceptance: within 10%);
 * ``bit_identity``— the sharded pack equals the host slot oracle after EVERY
                     event (byte-for-byte; raises on first divergence);
-* ``rescale``     — latency + movement of the two rescales-under-ingest.
+* ``rescale``     — latency + movement of the two rescales-under-ingest;
+* ``rebuild_under_burst`` — a bursty-stream sub-run (SyntheticStream burst
+                    mode) stressing the commit's delta-splice path with
+                    churn spikes while rebuilds are in flight.
 
 ``--smoke`` runs a scaled-down stream and prints the per-rung timing table —
-surfaced in the CI multidevice job log so rung-cost regressions are visible
-without downloading artifacts.
+surfaced in the CI multidevice AND multihost job logs so rung-cost
+regressions are visible without downloading artifacts.
 """
 from __future__ import annotations
 
@@ -45,14 +57,102 @@ from .common import emit
 
 K0, K_UP, K_DOWN = 8, 12, 6
 
-# The PR-3 scenario config (defaults, 1-region spans) so the partial-rung
-# cost is apples-to-apples with the committed 50.79 ms "before" figure; wider
-# spans were measured to cost proportionally more without changing the
-# escalation trajectory (candidate selection keeps the incumbent layout on
-# most repairs — the noise-degraded spans retain good residual GEO order).
-CONFIG = StreamConfig()
+# The PR-3 scenario config (default thresholds, 1-region spans) so the
+# partial-rung cost is apples-to-apples with the committed 50.79 ms "before"
+# figure; wider spans were measured to cost proportionally more without
+# changing the escalation trajectory (candidate selection keeps the incumbent
+# layout on most repairs — the noise-degraded spans retain good residual GEO
+# order). partial_cooldown=6: at the fine-grained batch size below, drift
+# crosses the partial threshold and then STAYS above it for the rest of the
+# cycle — without hysteresis the span rung would re-fire on every one of
+# those batches, re-repairing a span it just repaired (span repairs plateau
+# after the first pass on the same drifted layout; rung costs in
+# ``partial_rung`` are measured standalone and are unaffected).
+CONFIG = StreamConfig(partial_cooldown=6)
 
 PR3_PARTIAL_MS = 50.79  # committed BENCH_stream.json before the device rung
+
+# Program kinds only the escalation ladder dispatches: the cache-counter walk
+# below proves their misses (== compiles) stay flat across the monitored
+# stream. Scatter cap-buckets legitimately compile on first occurrence inside
+# the stream (pre-existing behavior), and compact/warm compiles happen inside
+# a rescale's own reported latency — both excluded by design.
+ESCALATION_KINDS = ("span_repair", "full_reorder", "splice")
+
+
+def _escalation_misses(pc: dict) -> int:
+    return sum(pc.get(k, {}).get("misses", 0) for k in ESCALATION_KINDS)
+
+
+def _stream_escalation_compiles(events) -> int:
+    """Walk the seq-ordered event log: new escalation-kind misses appearing
+    at an INGEST event were paid inside the monitored ingest+monitor path."""
+    compiles = 0
+    prev = None
+    for e in events:
+        pc = getattr(e, "program_cache", None)
+        if not pc:
+            continue  # RebuildEvents / counter-less events carry no snapshot
+        cur = _escalation_misses(pc)
+        if prev is not None and e.kind == "ingest":
+            compiles += max(0, cur - prev)
+        prev = cur
+    return compiles
+
+
+def _rebuild_under_burst(
+    full_rebuild: str, rebuild_flight: int, mesh_size: int | None,
+) -> dict:
+    """Bursty sub-run: churn spikes (burst batches ``burst_factor``× the base
+    size at a heavier delete ratio) landing while full rebuilds are in
+    flight — the commit's delta-splice path under maximum pressure. Bit
+    identity is verified after every event; the returned accounting shows the
+    rebuilds actually overlapped burst ingest (replayed delta batches > 0)."""
+    from repro.core.graph import rmat_graph
+
+    g = rmat_graph(9, 8, seed=3)
+    order = ordering.geo_order(g, seed=0)
+    src, dst = g.src[order].astype(np.int64), g.dst[order].astype(np.int64)
+    # Aggressive thresholds so the stream escalates to full rebuilds often
+    # enough that bursts land mid-flight.
+    cfg = StreamConfig(partial_drift=1.01, full_drift=1.03, span_regions=2)
+    orderer = IncrementalOrderer(src, dst, g.num_vertices, regions=4, config=cfg)
+    engine = StreamingEngine(
+        orderer, MM.make_graph_mesh(mesh_size), span_repair="device",
+        full_rebuild=full_rebuild, rebuild_flight=rebuild_flight,
+        warm_scatter_caps=(64, 128, 256, 512),  # burst batches hit big buckets
+    )
+    ctl = ec.ElasticController(4, clock=lambda: 0.0)
+    ctl.attach_stream(engine)
+    stream = SyntheticStream(
+        g, batch_size=64, seed=2,
+        burst_every=5, burst_factor=4, burst_delete_frac=0.4,
+    )
+    batches = 25
+    burst_updates = 0
+    for b in range(batches):
+        ev = ctl.ingest(stream.batch())
+        engine.verify_bit_identity()
+        if stream.is_burst(b):
+            burst_updates += ev.inserted + ev.deleted + ev.skipped
+    while engine.rebuilds_in_flight:
+        ctl.ingest(stream.batch())
+        engine.verify_bit_identity()
+    rebuilds = [e for e in ctl.events if e.kind == "full_rebuild"]
+    committed = [r for r in rebuilds if r.committed]
+    return {
+        "batches": batches,
+        "burst_batches": sum(1 for b in range(batches) if stream.is_burst(b)),
+        "burst_updates": burst_updates,
+        "final_edges": orderer.num_edges,
+        "rebuilds": len(rebuilds),
+        "committed": len(committed),
+        "replayed_batches_total": sum(r.replayed_batches for r in committed),
+        "splice_ops_total": sum(r.splice_ops for r in committed),
+        "escalations": dict(engine.rung_counts),
+        # verify_bit_identity raised on any divergence above.
+        "bit_identity_all_events": True,
+    }
 
 
 def _host_rung_ms(orderer: IncrementalOrderer, reps: int = 3) -> float:
@@ -75,15 +175,22 @@ def _host_rung_ms(orderer: IncrementalOrderer, reps: int = 3) -> float:
 def run(
     scale: int = 11,
     edge_factor: int = 10,
-    batches: int = 100,
-    batch_size: int = 100,
+    # 400 × 25 (same 10k updates as the PR-3 scenario's 100 × 100): the async
+    # rung targets the fine-grained streaming regime — batches arriving
+    # constantly, per-batch latency the metric — which is exactly what the
+    # 3×-ingest amortization bound and the never-blocks-more-than-one-batch
+    # guarantee protect.
+    batches: int = 400,
+    batch_size: int = 25,
     out_json: str | None = "BENCH_stream.json",
     span_repair: str = "device",
     mesh_size: int | None = 1,
+    full_rebuild: str = "geo",
+    rebuild_flight: int = 2,
 ) -> dict:
     from repro.core.graph import rmat_graph
 
-    strict = out_json is not None  # smoke runs skip the timing acceptances
+    strict = out_json is not None  # smoke runs skip machine-speed acceptances
 
     g = rmat_graph(scale, edge_factor, seed=0)
     t0 = time.perf_counter()
@@ -92,7 +199,13 @@ def run(
     src, dst = g.src[order].astype(np.int64), g.dst[order].astype(np.int64)
 
     orderer = IncrementalOrderer(src, dst, g.num_vertices, regions=K0, config=CONFIG)
-    engine = StreamingEngine(orderer, MM.make_graph_mesh(mesh_size), span_repair=span_repair)
+    engine = StreamingEngine(
+        orderer, MM.make_graph_mesh(mesh_size), span_repair=span_repair,
+        full_rebuild=full_rebuild, rebuild_flight=rebuild_flight,
+        # Seed the expected scatter op-capacity buckets so not even the first
+        # batch (or the first after a rescale) pays a compile in-stream.
+        warm_scatter_caps=(batch_size, 2 * batch_size),
+    )
     # Simulated clock: liveness must be driven by the scenario's script, not
     # by how fast this machine happens to run the stream.
     clock = [0.0]
@@ -138,8 +251,9 @@ def run(
             for h in sorted(ctl.hosts)[K_UP - K_DOWN :]:
                 ctl.heartbeat(h, step=b)  # survivors beat; the rest went dark
             rescale_via_controller(K_DOWN)
+        batch = stream.batch()  # generator cost is workload, not system, cost
         t_b = time.perf_counter()
-        ev = ctl.ingest(stream.batch())
+        ev = ctl.ingest(batch)
         batch_wall_s.append(time.perf_counter() - t_b)
         ingest_s.append(ev.elapsed_s)
         monitor_by_rung[ev.escalation].append(ev.monitor_s)
@@ -150,6 +264,11 @@ def run(
         if b % max(1, batches // 10) == max(1, batches // 10) - 1:
             checkpoint(b)
     t_stream = time.perf_counter() - t_start
+    # A rebuild still in flight at stream end: complete it so the accounting
+    # below sees every dispatched rebuild through to its commit.
+    while engine.rebuilds_in_flight:
+        ev = ctl.ingest(stream.batch())
+        engine.verify_bit_identity()
     esc = dict(engine.rung_counts)
 
     # Full re-ordering cost on the FINAL graph — what every batch would pay
@@ -159,6 +278,8 @@ def run(
     ordering.geo_order(orderer.graph(), seed=0)
     t_geo_final = time.perf_counter() - t1
     host_rung_ms = _host_rung_ms(orderer)
+
+    burst = _rebuild_under_burst(full_rebuild, rebuild_flight, mesh_size)
 
     med = float(np.median(ingest_s))
     p90 = float(np.percentile(ingest_s, 90))
@@ -171,6 +292,15 @@ def run(
     )
     worst_ratio = max(c["ratio"] for c in checkpoints)
     seqs = [e.seq for e in ctl.events]
+    rebuilds = [e for e in ctl.events if e.kind == "full_rebuild"]
+    committed = [r for r in rebuilds if r.committed]
+    # The non-blocking proof, from the event log itself: no ingest batch both
+    # dispatched and committed a rebuild (rebuild_flight >= 1), i.e. the full
+    # rung never holds ingest for longer than the one commit batch.
+    ingest_events = [e for e in ctl.events if e.kind == "ingest"]
+    dispatch_batches = sum(1 for e in ingest_events if e.rebuild_state == "dispatch")
+    commit_batches = sum(1 for e in ingest_events if e.rebuild_state == "commit")
+    esc_compiles = _stream_escalation_compiles(ctl.events)
     result = {
         "scenario": {
             "base_edges": int(g.num_edges), "final_edges": orderer.num_edges,
@@ -178,6 +308,7 @@ def run(
             "batch_size": batch_size, "updates": updates,
             "k_path": [K0, K_UP, K_DOWN],
             "span_repair": span_repair, "span_regions": CONFIG.span_regions,
+            "full_rebuild": full_rebuild, "rebuild_flight": rebuild_flight,
             "events_seq_monotonic": seqs == sorted(seqs) and len(set(seqs)) == len(seqs),
         },
         "ingest": {
@@ -196,19 +327,52 @@ def run(
             "mean_batch_wall_ms": round(mean_wall * 1e3, 3),
             "speedup_vs_reorder_every_batch": round(amortized_speedup, 1),
             "vs_ingest_only_median": round(mean_wall / med, 2),
-            # ISSUE-5 target: ≤ 3× the ingest-only median. The partial rung no
-            # longer moves this needle (it is ~10% of batch wall); the floor
-            # is the FULL rung — host geo_order must fire ~10×/100 batches to
-            # hold the 1.10 RF margin on this stream, and ~180 ms × 10% is
-            # ~half the mean batch wall on its own (ROADMAP follow-up:
-            # device-side / async full rebuild).
-            "issue_target_within_3x_ingest": mean_wall <= 3.0 * med,
+            # ISSUE-6 target, COMPUTED from this run's numbers (asserted
+            # below, in --smoke too): the async full rung — dispatch against
+            # shadow buffers, commit + delta splice rebuild_flight batches
+            # later — must keep the full per-batch wall within 3× the
+            # ingest-only median.
+            "issue_target_within_3x_ingest": bool(mean_wall <= 3.0 * med),
             "escalations": esc,
             "monitor_mean_ms_by_rung": {
                 rung: round(float(np.mean(ts)) * 1e3, 2) if ts else 0.0
                 for rung, ts in monitor_by_rung.items()
             },
             "stream_wall_s": round(t_stream, 2),
+        },
+        # ISSUE-6 tentpole: the async full-rebuild rung, from the event log.
+        "full_rung": {
+            "mode": full_rebuild,
+            "rebuild_flight": rebuild_flight,
+            "rebuilds": len(rebuilds),
+            "committed": len(committed),
+            "aborted": sum(1 for r in rebuilds if r.aborted),
+            "dispatch_mean_ms": round(
+                float(np.mean([r.dispatch_s for r in rebuilds])) * 1e3, 2
+            ) if rebuilds else 0.0,
+            "commit_mean_ms": round(
+                float(np.mean([r.commit_s for r in committed])) * 1e3, 2
+            ) if committed else 0.0,
+            "replayed_batches_total": sum(r.replayed_batches for r in committed),
+            "splice_ops_total": sum(r.splice_ops for r in committed),
+            "dispatch_batches": dispatch_batches,
+            "commit_batches": commit_batches,
+            # True ⇔ every COMMITTED rebuild stayed in flight ≥1 batch (its
+            # dispatch and commit landed on different batches): the rung never
+            # blocked ingest for more than the one commit batch. Aborted
+            # rebuilds (a rescale voided the snapshot) never commit, so they
+            # never block — whatever batch the abort landed on.
+            "never_blocks_more_than_one_batch": all(
+                r.flight_batches >= 1 for r in committed
+            ),
+        },
+        # Escalations never pay a compile: every span/full/splice program
+        # signature is warmed at layout changes, and the counter walk across
+        # the event log shows zero escalation-kind misses inside the stream.
+        "program_cache": {
+            "final": engine.program_cache_counters(),
+            "escalation_compiles_in_stream": esc_compiles,
+            "proof_no_escalation_compiles": esc_compiles == 0,
         },
         # ISSUE-5 tentpole: device span repair vs the host rungs. The honest
         # "before" is PR-3's committed 50.79 ms partial mean; host_geo_mean_ms
@@ -234,6 +398,7 @@ def run(
         "bit_identity": {"checked_events": len(batch_wall_s) + len(rescales),
                          "all_identical": True},
         "rescale": rescales,
+        "rebuild_under_burst": burst,
     }
     if out_json:
         with open(out_json, "w") as f:
@@ -247,26 +412,41 @@ def run(
         emit(f"stream/rescale_{r['k_old']}to{r['k_new']}", r["elapsed_ms"] * 1e3,
              f"moved={r['moved_edges']}")
     assert result["quality"]["acceptance_rf_margin_1.10"], f"RF drifted to {worst_ratio:.3f}x oracle"
+    # Protocol acceptances, asserted in EVERY run (--smoke included) — these
+    # are structural properties of the async rung, not machine-speed ratios.
+    assert result["scenario"]["events_seq_monotonic"], "event seq log not monotonic"
+    assert result["program_cache"]["proof_no_escalation_compiles"], (
+        f"{esc_compiles} escalation-kind compiles paid inside the stream"
+    )
+    if full_rebuild != "host" and rebuild_flight >= 1:
+        assert result["full_rung"]["never_blocks_more_than_one_batch"], (
+            "a full rebuild blocked ingest beyond its one commit batch"
+        )
+        # ISSUE-6 acceptance, COMPUTED from this run's measurements and
+        # asserted here (in --smoke too) rather than hand-recorded: the async
+        # full rung keeps the amortized batch wall within 3× the ingest-only
+        # median.
+        assert result["amortized"]["issue_target_within_3x_ingest"], (
+            f"amortized {mean_wall * 1e3:.1f}ms > 3x ingest median {med * 1e3:.1f}ms"
+        )
+        # The burst sub-run must have actually overlapped: at least one
+        # rebuild committed with delta batches replayed onto the new order.
+        assert burst["committed"] >= 1 and burst["replayed_batches_total"] >= 1, (
+            f"burst sub-run never exercised the delta-splice path: {burst}"
+        )
     if strict:
         assert result["ingest"]["acceptance_10x"], f"ingest only {speedup:.1f}x cheaper than full reorder"
         # Regression floor: even counting every escalation, streaming must
         # beat repartitioning from scratch on each batch.
         assert amortized_speedup >= 2.0, f"amortized cost only {amortized_speedup:.1f}x better"
         # ISSUE-5 regression gates, same-run ratios first so they hold on
-        # slower machines (the aspirational targets are recorded as
-        # issue_target_* fields): the device rung must beat today's host rung
-        # outright, stay well under PR-3's recorded 50.79 ms partial mean,
-        # and the amortized batch wall must stay ≤8× the ingest-only median
-        # (achieved ~5×; bounded below by the host full-GEO rung — see the
-        # amortized block's note and the ROADMAP follow-up).
+        # slower machines: the device rung must beat today's host rung
+        # outright and stay well under PR-3's recorded 50.79 ms partial mean.
         assert partial_ms <= host_rung_ms, (
             f"device rung {partial_ms:.1f}ms lost to host rung {host_rung_ms:.1f}ms"
         )
         assert partial_ms * 3.0 <= PR3_PARTIAL_MS, (
             f"partial rung {partial_ms:.1f}ms not 3x under PR-3's {PR3_PARTIAL_MS}ms"
-        )
-        assert mean_wall <= 8.0 * med, (
-            f"amortized {mean_wall * 1e3:.1f}ms > 8x ingest median {med * 1e3:.1f}ms"
         )
     return result
 
@@ -286,6 +466,19 @@ def print_rung_table(result: dict) -> None:
           f"{pr['host_geo_mean_ms']:.2f}ms ({pr['speedup_vs_host_rung']:.1f}x); "
           f"amortized {amort['mean_batch_wall_ms']:.1f}ms/batch "
           f"({amort['vs_ingest_only_median']:.2f}x ingest-only median)")
+    fr = result["full_rung"]
+    if fr["rebuilds"]:
+        print(f"  async full rung ({fr['mode']}, flight={fr['rebuild_flight']}): "
+              f"{fr['committed']}/{fr['rebuilds']} committed, dispatch "
+              f"{fr['dispatch_mean_ms']:.1f}ms + commit {fr['commit_mean_ms']:.1f}ms, "
+              f"{fr['replayed_batches_total']} delta batches replayed "
+              f"({fr['splice_ops_total']} splice ops); 3x-ingest target "
+              f"{'MET' if result['amortized']['issue_target_within_3x_ingest'] else 'missed'}")
+    burst = result["rebuild_under_burst"]
+    print(f"  burst sub-run: {burst['committed']}/{burst['rebuilds']} rebuilds "
+          f"committed under {burst['burst_batches']} burst batches, "
+          f"{burst['replayed_batches_total']} delta batches "
+          f"({burst['splice_ops_total']} splice ops) replayed")
 
 
 def main() -> None:
@@ -294,14 +487,31 @@ def main() -> None:
                     help="scaled-down stream; print the per-rung table, no JSON")
     ap.add_argument("--span-repair", default="device",
                     choices=["device", "host", "oracle", "differential"])
+    ap.add_argument("--full-rebuild", default="geo",
+                    choices=["host", "geo", "device", "differential"],
+                    help="full-rung mode: host = legacy sync resync; geo/device/"
+                         "differential = async on-mesh rebuild (DESIGN.md §11)")
+    ap.add_argument("--rebuild-flight", type=int, default=2,
+                    help="batches a dispatched rebuild stays in flight "
+                         "(0 = synchronous dispatch+commit)")
     args = ap.parse_args()
     if args.smoke:
         # Smoke spans every visible device (the CI multidevice job forces 8),
         # so the per-rung table below reflects the SHARDED span-repair path.
-        result = run(scale=9, edge_factor=8, batches=20, batch_size=64,
-                     out_json=None, span_repair=args.span_repair, mesh_size=None)
+        # batch_size 24 keeps the per-batch churn FRACTION small enough that
+        # the escalation ladder — and with it the 3x-ingest amortized gate and
+        # the RF-margin gate, both asserted in smoke too — runs the same
+        # anticipate/dispatch/commit cadence as the full fine-grained
+        # scenario, partial rungs included, with measured RF headroom under
+        # the 1.10 margin.
+        result = run(scale=9, edge_factor=8, batches=30, batch_size=24,
+                     out_json=None, span_repair=args.span_repair, mesh_size=None,
+                     full_rebuild=args.full_rebuild,
+                     rebuild_flight=args.rebuild_flight)
     else:
-        result = run(span_repair=args.span_repair)
+        result = run(span_repair=args.span_repair,
+                     full_rebuild=args.full_rebuild,
+                     rebuild_flight=args.rebuild_flight)
     print_rung_table(result)
 
 

@@ -106,6 +106,36 @@ print(f"proc {jax.process_index()}/{jax.process_count()}: 4->6 moved "
     else:  # e.g. a jaxlib without CPU collectives — the single-host story above stands
         print("  multi-host demo skipped (no localhost process-group support here)")
 
+    # 8. ASYNC FULL REBUILD: when drift escalates past the partial rung, the
+    #    whole-graph re-order runs as a device program against SHADOW buffers
+    #    while ingest keeps landing on the live ones — dispatch, fly for
+    #    rebuild_flight batches, then one commit batch splices the flight's
+    #    delta onto the new order and swaps it live (DESIGN.md §11). Ingest
+    #    never blocks for longer than that one commit. full_rebuild="host"
+    #    restores the synchronous stop-the-world rung.
+    orderer2 = IncrementalOrderer(src, dst, g.num_vertices, regions=8)
+    engine2 = StreamingEngine(
+        orderer2, MM.make_graph_mesh(1), full_rebuild="geo", rebuild_flight=2
+    )
+    stream2 = SyntheticStream(g, batch_size=256, seed=2)
+    engine2.ingest(stream2.batch(), verify=True)
+    orderer2.drift = lambda: 99.0  # force the top rung for the demo
+    engine2.monitor()  # dispatch: returns immediately, rebuild in flight
+    del orderer2.drift
+    states = [engine2.rebuild_state]
+    while engine2.rebuilds_in_flight:  # ingest continues UNDER the rebuild
+        engine2.ingest(stream2.batch(), verify=True)
+        engine2.monitor()
+        states.append(engine2.rebuild_state)
+    (rb,) = engine2.drain_rebuild_events()
+    engine2.verify_bit_identity()
+    print(f"async full rebuild: {' -> '.join(s or 'ingest' for s in states)}; "
+          f"re-ordered {rb['snapshot_edges']:,} edges while {rb['flight_batches']} "
+          f"batches kept ingesting, replayed {rb['replayed_batches']} onto the new "
+          f"order as {rb['splice_ops']} splice ops "
+          f"(dispatch {rb['dispatch_s']*1e3:.0f}ms async, "
+          f"commit {rb['commit_s']*1e3:.0f}ms blocked)")
+
 
 if __name__ == "__main__":
     main()

@@ -74,12 +74,14 @@ class Graph:
         de = np.concatenate([np.arange(e), np.arange(e)])
         # Sort by (src, dst) so neighbors come out in ascending dst order, as the
         # paper's Alg. 3/4 access "each neighbor edge in ascending order of the
-        # destination vertex id".
-        order = np.lexsort((dd, ds))
+        # destination vertex id". Directed pairs are unique after the dedup
+        # above, so the scalar key src·V + dst induces the same total order as
+        # lexsort((dd, ds)) at roughly half the cost; bincount likewise beats
+        # np.add.at for the degree histogram.
+        order = np.argsort(ds * np.int64(num_vertices) + dd, kind="stable")
         ds, dd, de = ds[order], dd[order], de[order]
         indptr = np.zeros(num_vertices + 1, dtype=np.int64)
-        np.add.at(indptr, ds + 1, 1)
-        indptr = np.cumsum(indptr)
+        indptr[1:] = np.cumsum(np.bincount(ds, minlength=num_vertices))
         return Graph(
             num_vertices=int(num_vertices),
             src=lo.astype(np.int32),

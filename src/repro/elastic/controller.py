@@ -9,9 +9,18 @@ which is exactly the paper's motivating scenario (§1).
 With a streaming engine attached (``attach_stream``) the controller also
 accepts graph updates: ``ingest`` applies an EdgeUpdateBatch on-device and
 runs the quality monitor, whose escalation ladder is ingest → partial
-re-order → full GEO repartition (DESIGN.md §9). Every event — scale or
-ingest — carries a monotonic ``seq`` from one shared counter, so interleaved
-logs have a total order regardless of wall-clock resolution.
+re-order → full GEO repartition (DESIGN.md §9). Every event — scale, ingest,
+or rebuild — carries a monotonic ``seq`` from one shared counter, so
+interleaved logs have a total order regardless of wall-clock resolution.
+
+Decision vs dispatch (DESIGN.md §11): membership changes (``add_hosts``,
+``poll``) first produce a ``ScaleDecision`` — the pure what-should-happen —
+and ``_execute`` then dispatches it against whatever engine is attached.
+Asynchronous work follows the same discipline one layer down: the engine's
+full-rebuild rung dispatches against shadow buffers and the controller drains
+the COMPLETED records (``drain_rebuild_events``) into ``RebuildEvent``s whose
+``seq`` is assigned at completion-commit time — an in-flight rebuild has no
+place in the total order until it commits (or aborts).
 """
 from __future__ import annotations
 
@@ -31,6 +40,18 @@ class HostState:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    """The DECISION half of a membership change — what should happen, before
+    any engine is touched. ``_execute`` turns one into a ScaleEvent."""
+
+    kind: str  # "scale_in" | "scale_out" | "straggler"
+    k_old: int
+    k_new: int
+    lost_hosts: tuple
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
 class ScaleEvent:
     kind: str  # "scale_in" | "scale_out" | "straggler"
     k_old: int
@@ -43,6 +64,9 @@ class ScaleEvent:
     cross_process_bytes: int = 0  # subset crossing jax.distributed process
     # boundaries — the network bill of a multi-host run (launch/multihost.py)
     seq: int = -1  # monotonic event sequence, shared with IngestEvents
+    program_cache: dict = dataclasses.field(default_factory=dict)
+    # per-kind {hits, misses, evictions} of the engine's program cache at
+    # emit time — flat misses across events prove no compile was paid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,9 +81,35 @@ class IngestEvent:
     monitor_s: float = 0.0  # quality monitor + any escalation it ran
     seq: int = -1
     repair: str = ""  # what the rung executed: "device" | "host" | "oracle" |
-    # "differential" | "resync" | "skipped" | "" (none)
+    # "differential" | "resync" | "skipped" | "" (none) | "dispatch" | "geo"
     rung_count: int = 0  # cumulative firings of THIS event's rung (incl. it)
     rung_total_s: float = 0.0  # cumulative seconds spent in this rung so far
+    # --- async full-rebuild overlap accounting (DESIGN.md §11) ---
+    rebuild_state: str = ""  # ""/"dispatch"/"flight"/"commit"/"abort"
+    rebuild_s: float = 0.0  # rebuild work inside THIS batch's monitor call
+    rebuilds_in_flight: int = 0  # rebuilds still in flight after the batch
+    program_cache: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class RebuildEvent:
+    """A COMPLETED async full rebuild (committed or aborted). Emitted when
+    the controller drains the engine's rebuild log, so ``seq`` is assigned at
+    completion-commit time — in-flight work has no place in the total order.
+    Appears in ``events`` immediately before the IngestEvent of the batch
+    whose monitor call completed it."""
+
+    kind: str  # always "full_rebuild"
+    mode: str  # "geo" | "device" | "differential"
+    committed: bool  # False on abort or resync fallback
+    aborted: bool  # True when a re-layout voided the snapshot
+    snapshot_edges: int  # live edges the dispatched program re-ordered
+    replayed_batches: int  # delta batches replayed onto the new order
+    splice_ops: int  # slot ops the commit splice scattered
+    flight_batches: int  # batches between dispatch and completion
+    dispatch_s: float  # host candidate compute + program dispatch (async)
+    commit_s: float  # commit: re-layout + replay + splice, blocked
+    seq: int = -1
 
 
 class ElasticController:
@@ -165,16 +215,52 @@ class ElasticController:
         """
         self.stream = stream
 
+    def _cache_counters(self) -> dict:
+        """Per-kind program-cache counters of the attached stream engine (a
+        host-only replay stream has none — default to empty)."""
+        fn = getattr(self.stream, "program_cache_counters", None)
+        return fn() if fn is not None else {}
+
+    def _drain_rebuilds(self) -> list:
+        """Wrap the engine's completed rebuild records into RebuildEvents,
+        assigning the shared seq NOW — completion-commit time. Called before
+        the IngestEvent of the completing batch is sequenced, so the log
+        order is rebuild-then-ingest, exactly the order the state changed."""
+        drain = getattr(self.stream, "drain_rebuild_events", None)
+        if drain is None:
+            return []
+        out = []
+        for rec in drain():
+            ev = RebuildEvent(
+                kind=rec["kind"],
+                mode=rec["mode"],
+                committed=rec["committed"],
+                aborted=rec["aborted"],
+                snapshot_edges=rec["snapshot_edges"],
+                replayed_batches=rec["replayed_batches"],
+                splice_ops=rec["splice_ops"],
+                flight_batches=rec["flight_batches"],
+                dispatch_s=rec["dispatch_s"],
+                commit_s=rec["commit_s"],
+                seq=self._next_seq(),
+            )
+            self.events.append(ev)
+            out.append(ev)
+        return out
+
     def ingest(self, batch) -> IngestEvent:
         """Apply an EdgeUpdateBatch to the attached stream, run the quality
-        monitor (escalation ladder: ingest → partial re-order → full GEO
-        repartition), and log the event in the shared seq order."""
+        monitor (escalation ladder: ingest → partial re-order → async full
+        rebuild), and log the event in the shared seq order. A rebuild the
+        monitor completed (committed or aborted) is sequenced as its own
+        RebuildEvent immediately before this batch's IngestEvent."""
         if self.stream is None:
             raise ValueError("no streaming engine attached (call attach_stream first)")
         stats = self.stream.ingest(batch)
         t0 = time.perf_counter()
         escalation = self.stream.monitor()
         monitor_s = time.perf_counter() - t0
+        self._drain_rebuilds()
         # Per-rung ladder accounting (StreamingEngine keeps the counters; a
         # host-only replay stream may not — default to empty).
         counts = getattr(self.stream, "rung_counts", {})
@@ -192,11 +278,30 @@ class ElasticController:
             repair=getattr(self.stream, "last_repair", ""),
             rung_count=int(counts.get(escalation, 0)),
             rung_total_s=float(totals.get(escalation, 0.0)),
+            rebuild_state=getattr(self.stream, "rebuild_state", ""),
+            rebuild_s=float(getattr(self.stream, "last_rebuild_s", 0.0)),
+            rebuilds_in_flight=int(getattr(self.stream, "rebuilds_in_flight", 0)),
+            program_cache=self._cache_counters(),
         )
         self.events.append(ev)
         return ev
 
     def _emit(self, kind, k_old, k_new, lost, reason) -> ScaleEvent:
+        """Decision + dispatch in one call — what the membership hooks
+        (``add_hosts``/``poll``) use."""
+        return self._execute(ScaleDecision(kind, k_old, k_new, tuple(lost), reason))
+
+    def _execute(self, decision: ScaleDecision) -> ScaleEvent:
+        """Dispatch a ScaleDecision against whatever engine is attached and
+        sequence the resulting ScaleEvent. Pure plan (no engine): the CEP
+        model supplies the migration fraction."""
+        kind, k_old, k_new, lost, reason = (
+            decision.kind,
+            decision.k_old,
+            decision.k_new,
+            decision.lost_hosts,
+            decision.reason,
+        )
         executed = False
         cross_device_bytes = 0
         cross_process_bytes = 0
@@ -225,9 +330,13 @@ class ElasticController:
                 frac = 0.0
             else:
                 frac = cep.migrated_edges_exact(self.state_elements, k_old, k_new) / self.state_elements
+        # A rescale aborts any in-flight rebuild: sequence the abort record
+        # BEFORE the scale event that caused it.
+        self._drain_rebuilds()
         ev = ScaleEvent(
             kind, k_old, k_new, lost, frac, reason, executed, cross_device_bytes,
             cross_process_bytes, seq=self._next_seq(),
+            program_cache=self._cache_counters(),
         )
         self.events.append(ev)
         return ev

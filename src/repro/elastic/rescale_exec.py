@@ -73,13 +73,22 @@ class ProgramCache:
     once per signature without any cache growing without limit, and
     ``program_cache_size`` bounds ALL of a component's cached programs at
     once (ElasticRescaler: migrate + counts; StreamingEngine: scatter +
-    compact + span_repair)."""
+    compact + span_repair + full_reorder + splice).
+
+    Per-kind hit/miss/eviction counters (``counters`` / ``counters_snapshot``)
+    make the cache's behavior auditable from event logs: a ``get`` returning a
+    program is a hit, a ``get`` returning None a miss (the caller compiles and
+    ``put``s), and ``put`` evicting an LRU victim an eviction — so the stream
+    bench can PROVE an escalation never paid a compile (its kind's miss count
+    is flat across the monitored stream) instead of asserting it by eye."""
 
     def __init__(self, size: int):
         if size < 1:
             raise ValueError("program_cache_size must be >= 1")
         self.size = int(size)
         self._programs: collections.OrderedDict = collections.OrderedDict()
+        # kind (key[0] for tuple keys, "?" otherwise) → {hits, misses, evictions}
+        self.counters: dict = {}
 
     def __len__(self) -> int:
         return len(self._programs)
@@ -90,16 +99,46 @@ class ProgramCache:
     def __iter__(self):
         return iter(self._programs)  # keys, least- to most-recently used
 
+    @staticmethod
+    def _kind(key) -> str:
+        return str(key[0]) if isinstance(key, tuple) and key else "?"
+
+    def _count(self, key, event: str) -> None:
+        c = self.counters.setdefault(
+            self._kind(key), {"hits": 0, "misses": 0, "evictions": 0}
+        )
+        c[event] += 1
+
+    def counters_snapshot(self) -> dict:
+        """Deep copy of the per-kind counters (safe to attach to events)."""
+        return {kind: dict(c) for kind, c in self.counters.items()}
+
     def get(self, key):
         cached = self._programs.get(key)
         if cached is not None:
             self._programs.move_to_end(key)
+            self._count(key, "hits")
+        else:
+            self._count(key, "misses")
         return cached
+
+    def touch(self, key) -> bool:
+        """Refresh recency if present (counted as a hit). Unlike ``get``, an
+        absent key counts NOTHING — warm-up helpers probe with this before
+        delegating to the builder (whose own ``get`` miss then counts the
+        compile exactly once, keeping misses == compiles for the bench)."""
+        cached = self._programs.get(key)
+        if cached is not None:
+            self._programs.move_to_end(key)
+            self._count(key, "hits")
+            return True
+        return False
 
     def put(self, key, value):
         self._programs[key] = value
         while len(self._programs) > self.size:
-            self._programs.popitem(last=False)
+            victim, _ = self._programs.popitem(last=False)
+            self._count(victim, "evictions")
         return value
 
 

@@ -140,6 +140,10 @@ class IncrementalOrderer:
         self._cooldown = 0  # partial-rung hysteresis counter (maybe_escalate)
         self._ops: dict[int, SlotOp] = {}
         self._deg_delta: dict[int, int] = {}  # vertex → degree change since drain
+        # Async full-rebuild recording: while a rebuild is in flight, every
+        # applied batch is ALSO queued here so the commit can replay it onto
+        # the rebuilt order (DESIGN.md §11). None = no rebuild in flight.
+        self._rebuild_delta: Optional[list] = None
         self._layout(
             np.asarray(src_ordered, dtype=np.int64),
             np.asarray(dst_ordered, dtype=np.int64),
@@ -316,6 +320,10 @@ class IncrementalOrderer:
             if np.any(bad):
                 u, v = ins[int(np.flatnonzero(bad)[0])].tolist()
                 raise ValueError(f"edge ({u}, {v}) out of range (|V|={self.num_vertices})")
+        if self._rebuild_delta is not None:
+            # Double-buffer protocol: the live slot array keeps advancing
+            # below; the queued copy replays onto the rebuilt order at commit.
+            self._rebuild_delta.append(batch)
         inserted = deleted = skipped = 0
         for u, v in batch.delete.tolist():
             if self._delete(int(u), int(v)):
@@ -519,31 +527,63 @@ class IncrementalOrderer:
         return self.rf(k), oracle
 
     # ------------------------------------------------------------ escalation
-    def escalation(self) -> str:
+    def escalation(
+        self, full_lookahead: float = 0.0, partial_shadow: float = 0.0
+    ) -> str:
         """The ladder DECISION only — 'none' | 'partial' | 'full' — so callers
         owning a device mirror (``ingest.StreamingEngine``) can execute the
         partial rung on-mesh instead of the host ``geo_order`` path.
-        Thresholds are strict: drift exactly at a threshold does not fire."""
+        Thresholds are strict: drift exactly at a threshold does not fire.
+
+        ``full_lookahead`` anticipates an asynchronous full rung: the caller
+        adds its projected drift growth over the rebuild's flight window, so
+        the dispatch fires early enough that the COMMIT lands at roughly the
+        drift a synchronous rebuild would have repaired at. Zero (the
+        default) keeps the classic instant-repair decision; the partial
+        threshold never anticipates (that rung repairs synchronously).
+
+        ``partial_shadow`` suppresses the partial rung when a full rebuild is
+        projected within that drift horizon (caller-chosen, typically a
+        couple of flight windows of growth): repeated span repairs on the
+        same drifted layout plateau after the first pass, so a partial fired
+        just before a whole-graph re-order buys nothing the imminent commit
+        will not erase — the decision reports 'none' instead."""
         d = self.drift()
-        if d > self.config.full_drift:
+        if d + full_lookahead > self.config.full_drift:
             return "full"
         if d > self.config.partial_drift:
+            if partial_shadow > 0.0 and d + partial_shadow > self.config.full_drift:
+                return "none"
             return "partial"
         return "none"
 
-    def maybe_escalate(self, partial_fn=None) -> str:
+    def maybe_escalate(
+        self,
+        partial_fn=None,
+        full_fn=None,
+        full_lookahead: float = 0.0,
+        partial_shadow: float = 0.0,
+    ) -> str:
         """Quality-monitor step: 'none' | 'partial' | 'full' (what ran).
 
         ``partial_fn`` delegates the partial rung (the streaming engine passes
         its on-device span repair; host-only replays pass the numpy mirror);
-        None keeps the host ``geo_order`` span repair. A fired partial starts
-        a ``config.partial_cooldown``-step hysteresis window during which
-        further partial triggers report 'none' (a just-repaired layout needs
-        fresh updates before repairing again pays for itself); the full rung
-        ignores the window and resets it."""
-        rung = self.escalation()
+        None keeps the host ``geo_order`` span repair. ``full_fn`` delegates
+        the full rung the same way — the streaming engine passes its async
+        dispatch so the rebuild runs against a snapshot while ingest
+        continues; None keeps the synchronous ``full_rebuild``. A fired
+        partial starts a ``config.partial_cooldown``-step hysteresis window
+        during which further partial triggers report 'none' (a just-repaired
+        layout needs fresh updates before repairing again pays for itself);
+        the full rung ignores the window and resets it. ``full_lookahead``
+        and ``partial_shadow`` pass through to ``escalation()`` (async
+        dispatch anticipation / partial-rung shadow suppression)."""
+        rung = self.escalation(full_lookahead, partial_shadow)
         if rung == "full":
-            self.full_rebuild()
+            if full_fn is None:
+                self.full_rebuild()
+            else:
+                full_fn()
             self._cooldown = 0
         elif rung == "partial":
             if self._cooldown > 0:
@@ -773,6 +813,74 @@ class IncrementalOrderer:
         self._layout(g.src[order].astype(np.int64), g.dst[order].astype(np.int64), self._regions)
         self._finish_relayout()
         self._set_baseline()  # a fresh GEO order IS the new quality yardstick
+
+    # -------------------------------------------------- async full rebuild
+    @property
+    def rebuild_in_flight(self) -> bool:
+        return self._rebuild_delta is not None
+
+    @property
+    def rebuild_delta_batches(self) -> int:
+        """Batches queued for replay by the in-flight rebuild (0 if none)."""
+        return len(self._rebuild_delta) if self._rebuild_delta is not None else 0
+
+    def begin_full_rebuild(self) -> tuple[np.ndarray, np.ndarray]:
+        """Start the double-buffered rebuild protocol (DESIGN.md §11): return
+        the ordered snapshot the rebuild will re-order, and start queuing
+        every subsequently applied batch for the commit's replay. The live
+        slot array keeps serving ingest untouched. The caller (the streaming
+        engine) must be device-synced — pending slot ops are NOT snapshotted."""
+        if self._rebuild_delta is not None:
+            raise ValueError("a full rebuild is already in flight")
+        self._rebuild_delta = []
+        return self.snapshot()
+
+    def abort_full_rebuild(self) -> int:
+        """Drop the in-flight rebuild (re-layout / rescale invalidated its
+        snapshot). Returns the number of queued batches discarded; drift
+        stays as-is, so the ladder simply re-fires later."""
+        n = self.rebuild_delta_batches
+        self._rebuild_delta = None
+        return n
+
+    def commit_full_rebuild(self, cand_src: np.ndarray, cand_dst: np.ndarray) -> bool:
+        """Commit an async rebuild: re-layout to the candidate order of the
+        SNAPSHOT (``begin_full_rebuild``'s edge list, re-ordered), replay the
+        batches queued during the flight, and re-baseline the drift monitor.
+
+        Returns True when the commit kept the slot-array shape: the slot ops
+        accumulated by the replay then describe EXACTLY the delta between the
+        candidate layout and the committed state — the engine drains them into
+        the device splice program, so the device never re-uploads. Returns
+        False when the layout width changed underneath (the candidate chunks
+        outgrew ``slots_per_region``, or a replayed insert forced ``grow``):
+        the caller must resync (``needs_resync`` is set).
+
+        The caller must be device-synced before calling (the engine's monitor
+        is): pending ops are dropped, and the replay's degree deltas are
+        discarded because the flight's ingests already applied them to the
+        live device degrees — a re-order never changes the graph."""
+        if self._rebuild_delta is None:
+            raise ValueError("no full rebuild in flight")
+        delta, self._rebuild_delta = self._rebuild_delta, None
+        spr_before = self._spr
+        self._ops.clear()
+        self._deg_delta.clear()
+        self._layout(
+            np.asarray(cand_src, dtype=np.int64),
+            np.asarray(cand_dst, dtype=np.int64),
+            self._regions,
+        )
+        shape_kept = self._spr == spr_before
+        for batch in delta:
+            self.apply(batch)  # may grow() → needs_resync, handled below
+        self._deg_delta.clear()  # flight ingests already applied these
+        self._set_baseline()  # rebuilt + replayed = the new quality yardstick
+        if not shape_kept or self.needs_resync:
+            self._ops.clear()
+            self.needs_resync = True
+            return False
+        return True
 
     def relayout(self, regions: int) -> None:
         """Re-slice the CURRENT incremental order into ``regions`` regions

@@ -31,10 +31,23 @@ re-packing from the host:
   oracle: ``span_repair="oracle"`` applies it verbatim on device
   (bit-identical to the PR-3 host path), ``"differential"`` feeds it to the
   candidate selection so the repair is never worse than GEO by construction.
+* **full_reorder** + **splice** (the full-rebuild rung, async — DESIGN.md
+  §11): when ``full_rebuild`` is an async mode, the top rung only DISPATCHES
+  — the whole-graph re-order program (kernels/full_reorder.py, the span
+  program generalized to s = k) runs against the current buffers WITHOUT
+  donating them, producing shadow output buffers while ingest keeps
+  scattering into the live ones. ``rebuild_flight`` batches later the commit
+  re-layouts the host slot array to the candidate order, replays the batches
+  queued during the flight (``IncrementalOrderer.commit_full_rebuild``), and
+  the **splice** program scatters the replay's coalesced slot ops onto the
+  shadow buffers in fixed-capacity chunks — the swap that makes them the
+  live pack. Ingest is never blocked longer than that one commit batch.
 
-All three program families live in ONE bounded ``ProgramCache`` LRU under
+All five program families live in ONE bounded ``ProgramCache`` LRU under
 kind-prefixed keys, so ``program_cache_size`` bounds every cached program of
-a long-lived engine.
+a long-lived engine — and the cache's per-kind hit/miss/eviction counters
+(``program_cache_counters``) let the bench prove escalations never pay a
+compile (every signature is warmed at layout changes; misses == compiles).
 
 Bit-identity contract (DESIGN.md §9): after any sequence of ingests,
 rescales, and span repairs, ``unshard_engine_data(engine.data)`` equals the
@@ -58,6 +71,7 @@ from ..compat import donate_jit
 from ..core import cep
 from ..elastic.rescale_exec import EDGE_BYTES, ProgramCache
 from ..graphs import engine as graph_engine
+from ..kernels import full_reorder as FRK
 from ..kernels import span_reorder as SRK
 from ..launch import sharding as SH
 from .incremental import IncrementalOrderer
@@ -66,6 +80,17 @@ from .updates import EdgeUpdateBatch
 __all__ = ["IngestStats", "StreamRescaleStats", "StreamingEngine"]
 
 _MIN_OP_CAPACITY = 32
+# Fixed op capacity of the commit splice: one warmed program signature serves
+# every commit; larger replay deltas run as chained chunks of this size.
+_SPLICE_CAP = 1024
+# full_rebuild engine mode → full-reorder program mode (kernels/full_reorder):
+#   "geo"          — host geo_order candidate applied verbatim (the oracle
+#                    path: commits are byte-identical to a host full_rebuild
+#                    of the snapshot, modulo the async delta replay)
+#   "device"       — on-mesh step-parallel greedy; the host mirror's
+#                    never-worse-than-incumbent selection ships as an operand
+#   "differential" — geo candidate, greedy-vs-candidate selection ON device
+_FULL_PROGRAM_MODE = {"geo": "apply", "device": "greedy", "differential": "select"}
 
 
 def _next_pow2(n: int) -> int:
@@ -126,6 +151,9 @@ class StreamingEngine:
         program_cache_size: int = 24,
         scatter_limit: int = 1024,
         span_repair: str = "device",
+        full_rebuild: str = "host",
+        rebuild_flight: int = 2,
+        warm_scatter_caps: tuple = (),
     ):
         if mesh is None:
             from ..launch import mesh as MM
@@ -133,6 +161,10 @@ class StreamingEngine:
             mesh = MM.make_graph_mesh(1)
         if span_repair not in ("device", "host", "oracle", "differential"):
             raise ValueError(f"unknown span_repair mode {span_repair!r}")
+        if full_rebuild not in ("host", "geo", "device", "differential"):
+            raise ValueError(f"unknown full_rebuild mode {full_rebuild!r}")
+        if rebuild_flight < 0:
+            raise ValueError("rebuild_flight must be >= 0")
         self.orderer = orderer
         self.mesh = mesh
         self.donate = donate
@@ -152,21 +184,51 @@ class StreamingEngine:
         #   "differential" — device repair with the geo_order oracle as the
         #                    scored candidate (never worse than GEO)
         self.span_repair = span_repair
+        # Full-rebuild rung implementation (DESIGN.md §11):
+        #   "host"         — PR-3 path: synchronous host geo_order + re-upload
+        #   "geo"          — async; host geo_order candidate applied on-mesh
+        #                    (the production mode on hosts where the device
+        #                    greedy is not profitable, and the oracle mode)
+        #   "device"       — async; on-mesh step-parallel greedy, never worse
+        #                    than the incumbent layout by exact selection
+        #   "differential" — async; geo candidate with on-device selection,
+        #                    bit-identity verified at every commit
+        self.full_rebuild = full_rebuild
+        # Batches a dispatched rebuild stays in flight before its commit. 0 =
+        # commit inside the dispatching monitor call (synchronous semantics —
+        # the oracle-equivalence mode the tests pin against "host").
+        self.rebuild_flight = int(rebuild_flight)
+        self._flight: Optional[dict] = None  # in-flight rebuild state
+        self._last_drift = 1.0  # drift tracker for dispatch anticipation
+        self._drift_rate = 0.0  # EMA of per-batch drift growth
+        self.rebuild_log: list = []  # committed/aborted rebuild records
+        self.rebuild_state = ""  # ""/"dispatch"/"flight"/"commit"/"abort"
+        self.last_rebuild_s = 0.0  # rebuild work inside the last monitor call
         # ONE kind-prefixed LRU for every program family (scatter / compact /
-        # span_repair), like ElasticRescaler's migrate+counts cache. The
-        # default is sized for the families SHARING it: several scatter
-        # op-capacity buckets per layout, one compact program per (k_old,
-        # k_new) pair of an oscillating controller, one span program per
-        # layout — an eviction of a warmed span program would put its
-        # recompile back inside the monitored escalation path.
+        # span_repair / full_reorder / splice), like ElasticRescaler's
+        # migrate+counts cache. The default is sized for the families SHARING
+        # it: several scatter op-capacity buckets per layout, one compact
+        # program per (k_old, k_new) pair of an oscillating controller, one
+        # span + one full-reorder + one splice program per layout — an
+        # eviction of a warmed program would put its recompile back inside
+        # the monitored escalation path.
         self._programs = ProgramCache(program_cache_size)
         # Per-rung escalation accounting, surfaced on IngestEvents.
         self.rung_counts = {"none": 0, "partial": 0, "full": 0}
         self.rung_s = {"none": 0.0, "partial": 0.0, "full": 0.0}
         self.last_repair = ""  # what the last partial/full rung executed
+        # Scatter op-capacity buckets to keep warm. Buckets are added as the
+        # stream uses them and re-warmed at every layout change; callers that
+        # know their batch sizes seed the expected buckets here so not even
+        # the FIRST batch pays a compile inside the ingest path.
+        self._seen_scatter_caps = {
+            int(_next_pow2(int(c))) for c in warm_scatter_caps
+        }
         self.data = self._upload()
         orderer.needs_resync = False
         self._warm_span_program()
+        self._warm_full_program()
+        self._warm_scatter_programs()
 
     # ------------------------------------------------------------- plumbing
     @property
@@ -201,13 +263,29 @@ class StreamingEngine:
 
         return MH.put_global(np.asarray(arr), NamedSharding(self.mesh, P()))
 
+    def program_cache_counters(self) -> dict:
+        """Per-kind {hits, misses, evictions} snapshot of the shared program
+        cache — surfaced on IngestEvents/ScaleEvents so a stream log proves
+        escalations never pay a compile (misses == compiles: the warm helpers
+        probe with ``touch``, which counts nothing on absence)."""
+        return self._programs.counters_snapshot()
+
+    @property
+    def rebuilds_in_flight(self) -> int:
+        return 1 if self._flight is not None else 0
+
     def _resync(self) -> None:
         """Full host re-upload after a slot re-layout (grow / full rebuild).
-        Rare by design — the escalation ladder's upper rungs."""
+        Rare by design — the escalation ladder's upper rungs. Aborts any
+        in-flight rebuild: its snapshot geometry no longer exists."""
+        if self._flight is not None:
+            self._abort_rebuild("resync")
         self.orderer.drain_ops()  # ops predate the re-layout; drop them
         self.data = self._upload()
         self.orderer.needs_resync = False
         self._warm_span_program()  # layout signature may have changed
+        self._warm_full_program()
+        self._warm_scatter_programs()
 
     def _warm_span_program(self) -> None:
         """Trace + compile the span-repair program for the CURRENT layout
@@ -222,9 +300,11 @@ class StreamingEngine:
         mode = {"oracle": "apply", "differential": "select"}.get(self.span_repair, "greedy")
         e_cap = int(self.data.edges.shape[1])
         key = self._span_key(mode, o.regions, self.data.k_pad, e_cap, s, self.mesh)
-        # get(), not `in`: a cache hit must refresh LRU recency, or a warmed
-        # span program idling between escalations becomes the eviction victim.
-        if self._programs.get(key) is not None:
+        # touch(), not `in`: a cache hit must refresh LRU recency, or a warmed
+        # span program idling between escalations becomes the eviction victim
+        # — and unlike get(), a touch of an ABSENT key counts no miss, which
+        # keeps the counters' `misses == compiles` invariant exact.
+        if self._programs.touch(key):
             return
         program = self._span_program(mode, o.regions, self.data.k_pad, e_cap, s, self.mesh)
         from ..launch import multihost as MH
@@ -240,6 +320,83 @@ class StreamingEngine:
             self._host_operand(np.zeros(1, dtype=np.int32)),
         )
         jax.block_until_ready(out[0])
+
+    def _warm_full_program(self) -> None:
+        """Trace + compile the async full-rebuild programs (whole-graph
+        re-order + commit splice) for the CURRENT layout signature on
+        throwaway buffers — same contract as ``_warm_span_program``: a full
+        escalation must never pay a compile inside the monitored stream.
+        No-op in the synchronous host mode."""
+        if self.full_rebuild == "host":
+            return
+        from ..launch import multihost as MH
+
+        o = self.orderer
+        e_cap = int(self.data.edges.shape[1])
+        mode = _FULL_PROGRAM_MODE[self.full_rebuild]
+        s_edges, s_mask, _ = SH.engine_shardings(self.mesh)
+        key = self._full_key(mode, o.regions, self.data.k_pad, e_cap, self.mesh)
+        if not self._programs.touch(key):
+            program = self._full_program(mode, o.regions, self.data.k_pad, e_cap, self.mesh)
+            cap = o.regions * (e_cap - 1)
+            operands = [
+                MH.put_global(np.zeros(self.data.edges.shape, np.int32), s_edges),
+                MH.put_global(np.zeros(self.data.mask.shape, np.float32), s_mask),
+                self._host_operand(np.arange(o.regions, dtype=np.int32)),
+                self._host_operand(np.arange(cap, dtype=np.int32)),
+            ]
+            if mode == "greedy":
+                operands.append(self._host_operand(np.zeros(1, np.int32)))
+            if mode in ("greedy", "select"):
+                operands += [
+                    self._host_operand(np.ones(1, np.int32)),  # alpha
+                    self._host_operand(np.ones(1, np.int32)),  # beta
+                    self._host_operand(np.ones(1, np.int32)),  # delta
+                    self._host_operand(np.zeros(self.num_vertices, np.int32)),
+                ]
+            jax.block_until_ready(program(*operands)[0])
+        skey = self._splice_key(self.data.k_pad, e_cap, self.mesh)
+        if not self._programs.touch(skey):
+            program = self._splice_program(self.data.k_pad, e_cap, self.mesh)
+            out = program(
+                MH.put_global(np.zeros(self.data.edges.shape, np.int32), s_edges),
+                MH.put_global(np.zeros(self.data.mask.shape, np.float32), s_mask),
+                self._host_operand(np.zeros(_SPLICE_CAP, np.int32)),
+                self._host_operand(np.full(_SPLICE_CAP, e_cap - 1, np.int32)),
+                self._host_operand(np.zeros((_SPLICE_CAP, 2), np.int32)),
+                self._host_operand(np.zeros(_SPLICE_CAP, np.float32)),
+            )
+            jax.block_until_ready(out[0])
+
+    def _warm_scatter_programs(self) -> None:
+        """Trace + compile the ingest scatter program for every op-capacity
+        bucket the stream has used (plus any caller-seeded buckets) under the
+        CURRENT layout signature, on throwaway buffers. Re-run at every
+        layout change, so steady-state ingest never pays a compile — not even
+        on the first batch after a rescale swaps the program signature."""
+        if not self._seen_scatter_caps:
+            return
+        from ..launch import multihost as MH
+
+        e_cap = int(self.data.edges.shape[1])
+        k_pad = self.data.k_pad
+        s_edges, s_mask, s_vert = SH.engine_shardings(self.mesh)
+        for cap in sorted(self._seen_scatter_caps):
+            if self._programs.touch(("scatter", k_pad, e_cap, cap, self.mesh)):
+                continue
+            program = self._scatter_program(k_pad, e_cap, cap, self.mesh)
+            out = program(
+                MH.put_global(np.zeros(self.data.edges.shape, np.int32), s_edges),
+                MH.put_global(np.zeros(self.data.mask.shape, np.float32), s_mask),
+                MH.put_global(np.zeros(self.data.degrees.shape, np.float32), s_vert),
+                self._host_operand(np.zeros(cap, np.int32)),
+                self._host_operand(np.full(cap, e_cap - 1, np.int32)),
+                self._host_operand(np.zeros((cap, 2), np.int32)),
+                self._host_operand(np.zeros(cap, np.float32)),
+                self._host_operand(np.zeros(2 * cap, np.int32)),
+                self._host_operand(np.zeros(2 * cap, np.float32)),
+            )
+            jax.block_until_ready(out[0])
 
     def _sync_pending(self) -> None:
         """Bring the device mirror up to date with whatever the host orderer
@@ -301,6 +458,7 @@ class StreamingEngine:
         k_pad = self.data.k_pad
         e_cap = int(self.data.edges.shape[1])  # slots_per_region + scratch
         cap = _next_pow2(max(len(ops), (len(deg) + 1) // 2, _MIN_OP_CAPACITY))
+        self._seen_scatter_caps.add(cap)
         # Padding ops target the scratch column (always re-zeroed by the
         # program), so no real slot is ever clobbered by a no-op.
         rows = np.zeros(cap, dtype=np.int32)
@@ -374,6 +532,10 @@ class StreamingEngine:
         # below describes the post-flush layout, and relayout drops pending
         # ops.
         self._sync_pending()
+        # A rescale re-layouts every slot: an in-flight rebuild's snapshot
+        # geometry (and its shadow buffers' shape) is void — abort it.
+        if self._flight is not None:
+            self._abort_rebuild("rescale")
         g = SH.graph_axis_size(self.mesh)
         k_old, spr_old = o.regions, o.slots_per_region
         old_edges = self.data.edges
@@ -431,10 +593,12 @@ class StreamingEngine:
             num_edges=o.num_edges,
         )
         o.needs_resync = False
-        # The k_new layout is a new span-program signature: compile it here,
-        # inside the rescale's reported latency, not inside the first partial
-        # escalation of the new layout.
+        # The k_new layout is a new span/full/scatter-program signature:
+        # compile them here, inside the rescale's reported latency, not
+        # inside the first escalation or ingest of the new layout.
         self._warm_span_program()
+        self._warm_full_program()
+        self._warm_scatter_programs()
         jax.block_until_ready(self.data.edges)
         elapsed = time.perf_counter() - t0
         if verify:
@@ -478,21 +642,368 @@ class StreamingEngine:
         per rung: a partial span re-order runs as the cached on-mesh
         span-repair program (mode ``span_repair``; host mode falls back to
         slot-op scatter / re-upload under ``scatter_limit``), a full rebuild
-        as a resync. Per-rung counters and timings accumulate in
-        ``rung_counts`` / ``rung_s``. Returns 'none' | 'partial' | 'full'."""
+        as a synchronous resync (``full_rebuild="host"``) or an ASYNC
+        dispatch (DESIGN.md §11): the whole-graph re-order program runs
+        against shadow buffers for ``rebuild_flight`` batches, then commits,
+        so ingest never blocks for longer than the one commit batch.
+        Escalation is suppressed while a rebuild is in flight — the drift
+        being measured is already being repaired, and the dispatch
+        ANTICIPATION below fires the rung early enough that the commit lands
+        before the live order leaves its quality margin. Per-rung counters
+        and timings accumulate in ``rung_counts`` / ``rung_s`` (dispatch and
+        commit both land in 'full'). Returns 'none' | 'partial' | 'full'."""
         t0 = time.perf_counter()
+        self.rebuild_state = ""
+        self.last_rebuild_s = 0.0
         # Flush anything the host applied since the last sync FIRST: the span
         # program reads the device buffers, which must mirror the host slots.
         self._sync_pending()
-        rung = self.orderer.maybe_escalate(partial_fn=self._partial_rung)
-        if rung == "full":
-            self._resync()
-            self.last_repair = "resync"
-        elif rung == "none":
-            self.last_repair = ""
+        # Dispatch anticipation: project the drift forward by the flight
+        # window (per-batch growth rate × rebuild_flight) so an async full
+        # rung fires early enough that its COMMIT lands at roughly the drift
+        # a synchronous rebuild would have repaired at. The rate is an EMA of
+        # the per-batch growth — anticipation projects the TREND; a single
+        # noisy drift jump must not halve the rebuild cycle by inflating the
+        # lookahead for one batch. Commits/rescales drop drift below the
+        # tracker, clamping that batch's sample to 0 and decaying the EMA —
+        # anticipation re-arms as growth resumes.
+        d = self.orderer.drift()
+        lookahead = 0.0
+        if self.full_rebuild != "host" and self.rebuild_flight > 0:
+            sample = max(0.0, d - self._last_drift)
+            self._drift_rate = 0.7 * self._drift_rate + 0.3 * sample
+            lookahead = self.rebuild_flight * self._drift_rate
+        self._last_drift = d
+        if self._flight is not None:
+            self._flight["countdown"] -= 1
+            if self._flight["countdown"] <= 0:
+                self._commit_rebuild()
+                rung = "full"
+            else:
+                self.rebuild_state = "flight"
+                self.last_repair = ""
+                rung = "none"
+        else:
+            # Partial shadow: with a full projected within two flight windows,
+            # a span repair buys nothing the imminent whole-graph commit will
+            # not erase (repeated partials on the same drifted layout plateau
+            # after the first pass) — suppress it and save the rung's cost.
+            rung = self.orderer.maybe_escalate(
+                partial_fn=self._partial_rung, full_fn=self._full_rung,
+                full_lookahead=lookahead, partial_shadow=2.0 * lookahead,
+            )
+            if rung == "none":
+                self.last_repair = ""
+            if self._flight is not None and self._flight["countdown"] <= 0:
+                # rebuild_flight == 0: dispatch and commit inside one monitor
+                # call — synchronous semantics, the oracle-equivalence mode.
+                self._commit_rebuild()
         self.rung_counts[rung] += 1
         self.rung_s[rung] += time.perf_counter() - t0
         return rung
+
+    def _full_rung(self) -> None:
+        """Execute the full rung: host mode keeps the synchronous PR-3 path
+        (host ``geo_order`` + full re-upload); the async modes dispatch the
+        on-mesh rebuild and return without blocking."""
+        if self.full_rebuild == "host":
+            self.orderer.full_rebuild()
+            self._resync()
+            self.last_repair = "resync"
+        else:
+            self._dispatch_rebuild()
+            self.rebuild_state = "dispatch"
+            self.last_repair = "dispatch"
+
+    # ------------------------------------------------------ async full rebuild
+    def _dispatch_rebuild(self) -> None:
+        """Dispatch the full rung asynchronously: snapshot the host slot
+        arrays (``begin_full_rebuild`` starts queuing batches for the commit's
+        replay), compute the candidate decision host-side via the byte-exact
+        mirror, and launch the cached whole-graph re-order program against the
+        CURRENT device buffers WITHOUT donating them — the program's fresh
+        output arrays are the shadow pack the commit splices the flight's
+        delta onto, while ingest keeps scattering into the live ones. Nothing
+        here blocks on the device."""
+        t0 = time.perf_counter()
+        o = self.orderer
+        u = o.slot_src.copy()
+        v = o.slot_dst.copy()
+        valid = o.slot_valid.copy()
+        o.begin_full_rebuild()
+        mode = _FULL_PROGRAM_MODE[self.full_rebuild]
+        nv = self.num_vertices
+        n_live = int(valid.sum())
+        ks = FRK.eval_ks_full(o.config.k_min, o.config.k_max, o.regions)
+        use_cand = True
+        params = None
+        if self.full_rebuild == "geo":
+            # Oracle path: host geo_order IS the committed order; the device
+            # program applies it verbatim (mode "apply").
+            chosen = FRK.geo_full_candidate(u, v, valid, nv, o.config.k_min, o.config.k_max)
+            cand = chosen
+        else:
+            if self.full_rebuild == "device":
+                cand = FRK.identity_candidate(valid)  # incumbent = never-worse floor
+            else:  # differential: geo oracle as the scored candidate
+                cand = FRK.geo_full_candidate(u, v, valid, nv, o.config.k_min, o.config.k_max)
+            deg = np.bincount(np.concatenate([u[valid], v[valid]]), minlength=1)
+            alpha, beta, delta = FRK.greedy_params(
+                n_live, o.config.k_min, o.config.k_max, int(deg.max())
+            )
+            permpos = FRK.fallback_positions(nv)
+            chosen, use_cand = FRK.select_full_order_host(
+                u, v, valid, nv, cand, ks, alpha, beta, delta, permpos
+            )
+            params = (alpha, beta, delta, permpos)
+        live_order = np.asarray(chosen[:n_live], dtype=np.int64)
+        cand_src = u[live_order]
+        cand_dst = v[live_order]
+        e_cap = int(self.data.edges.shape[1])
+        g = SH.graph_axis_size(self.mesh)
+        rows = np.asarray(
+            [SH.partition_row(p, o.regions, g) for p in range(o.regions)], dtype=np.int32
+        )
+        program = self._full_program(mode, o.regions, self.data.k_pad, e_cap, self.mesh)
+        operands = [
+            self.data.edges,
+            self.data.mask,
+            self._host_operand(rows),
+            self._host_operand(np.asarray(cand, dtype=np.int32)),
+        ]
+        if mode == "greedy":
+            operands.append(
+                self._host_operand(np.asarray([1 if use_cand else 0], np.int32))
+            )
+        if params is not None:
+            alpha, beta, delta, permpos = params
+            operands += [
+                self._host_operand(np.asarray([alpha], np.int32)),
+                self._host_operand(np.asarray([beta], np.int32)),
+                self._host_operand(np.asarray([delta], np.int32)),
+                self._host_operand(np.asarray(permpos, np.int32)),
+            ]
+        cand_edges, cand_mask = program(*operands)  # async — never blocked here
+        self._flight = {
+            "mode": self.full_rebuild,
+            "countdown": self.rebuild_flight,
+            "cand_dev": (cand_edges, cand_mask),
+            "cand_src": cand_src,
+            "cand_dst": cand_dst,
+            "snapshot_edges": n_live,
+            "dispatch_s": time.perf_counter() - t0,
+        }
+        self.last_rebuild_s = self._flight["dispatch_s"]
+
+    def _commit_rebuild(self) -> None:
+        """Commit the in-flight rebuild: re-layout the host slot array to the
+        candidate order and replay the flight's queued batches
+        (``commit_full_rebuild``), then splice the replay's coalesced slot ops
+        onto the shadow buffers — the swap that makes them the live pack.
+        Blocks, so the full rung's reported cost is honest. Falls back to a
+        resync when the commit could not keep the buffer shape."""
+        t0 = time.perf_counter()
+        fl, self._flight = self._flight, None
+        o = self.orderer
+        replayed = o.rebuild_delta_batches
+        ok = o.commit_full_rebuild(fl["cand_src"], fl["cand_dst"])
+        splice_ops = 0
+        if not ok:
+            self._resync()
+            self.last_repair = "resync"
+        else:
+            ops, _ = o.drain_ops()  # the replay's delta vs the candidate layout
+            splice_ops = len(ops)
+            edges, mask = fl["cand_dev"]
+            if ops:
+                edges, mask = self._splice(edges, mask, ops)
+            self.data = dataclasses.replace(
+                self.data, edges=edges, mask=mask, num_edges=o.num_edges
+            )
+            self.last_repair = fl["mode"]
+        jax.block_until_ready(self.data.edges)
+        self.rebuild_state = "commit"
+        commit_s = time.perf_counter() - t0
+        self.last_rebuild_s = commit_s
+        if self.full_rebuild == "differential":
+            self.verify_bit_identity()
+        self.rebuild_log.append(
+            {
+                "kind": "full_rebuild",
+                "mode": fl["mode"],
+                "committed": bool(ok),
+                "aborted": False,
+                "snapshot_edges": fl["snapshot_edges"],
+                "replayed_batches": replayed,
+                "splice_ops": splice_ops,
+                "flight_batches": self.rebuild_flight - fl["countdown"],
+                "dispatch_s": fl["dispatch_s"],
+                "commit_s": commit_s,
+            }
+        )
+
+    def _abort_rebuild(self, reason: str) -> None:
+        """Drop an in-flight rebuild: a re-layout (grow / rescale) voided its
+        snapshot geometry. The shadow buffers are simply released; drift is
+        untouched, so the ladder re-fires once the dust settles."""
+        fl, self._flight = self._flight, None
+        self.orderer.abort_full_rebuild()
+        self.rebuild_state = "abort"
+        self.rebuild_log.append(
+            {
+                "kind": "full_rebuild",
+                "mode": fl["mode"],
+                "committed": False,
+                "aborted": True,
+                "abort_reason": reason,
+                "snapshot_edges": fl["snapshot_edges"],
+                "replayed_batches": 0,
+                "splice_ops": 0,
+                "flight_batches": self.rebuild_flight - fl["countdown"],
+                "dispatch_s": fl["dispatch_s"],
+                "commit_s": 0.0,
+            }
+        )
+
+    def drain_rebuild_events(self) -> list:
+        """Completed (committed or aborted) rebuild records since the last
+        drain. The controller wraps them into ``RebuildEvent``s, assigning
+        the shared monotonic seq at drain — i.e. completion-commit — time."""
+        log, self.rebuild_log = self.rebuild_log, []
+        return log
+
+    def _splice(self, edges, mask, ops):
+        """Scatter the commit's replay ops onto the shadow buffers in
+        fixed-capacity chunks (one warmed splice signature serves every
+        commit; padding targets the re-zeroed scratch column, exactly like
+        the ingest scatter)."""
+        o = self.orderer
+        g = SH.graph_axis_size(self.mesh)
+        e_cap = int(edges.shape[1])
+        program = self._splice_program(self.data.k_pad, e_cap, self.mesh)
+        for base in range(0, len(ops), _SPLICE_CAP):
+            chunk = ops[base : base + _SPLICE_CAP]
+            rows = np.zeros(_SPLICE_CAP, dtype=np.int32)
+            cols = np.full(_SPLICE_CAP, e_cap - 1, dtype=np.int32)
+            vals = np.zeros((_SPLICE_CAP, 2), dtype=np.int32)
+            mvals = np.zeros(_SPLICE_CAP, dtype=np.float32)
+            for i, op in enumerate(chunk):
+                rows[i] = SH.partition_row(op.slot // o.slots_per_region, o.regions, g)
+                cols[i] = op.slot % o.slots_per_region
+                if op.valid:
+                    vals[i] = (op.u, op.v)
+                    mvals[i] = 1.0
+            edges, mask = program(
+                edges,
+                mask,
+                self._host_operand(rows),
+                self._host_operand(cols),
+                self._host_operand(vals),
+                self._host_operand(mvals),
+            )
+        return edges, mask
+
+    def _splice_key(self, k_pad: int, e_cap: int, mesh):
+        return ("splice", k_pad, e_cap, _SPLICE_CAP, mesh)
+
+    def _splice_program(self, k_pad: int, e_cap: int, mesh):
+        key = self._splice_key(k_pad, e_cap, mesh)
+        cached = self._programs.get(key)
+        if cached is not None:
+            return cached
+
+        def splice(edges, mask, rows, cols, vals, mvals):
+            edges = edges.at[rows, cols].set(vals)
+            mask = mask.at[rows, cols].set(mvals)
+            # Scratch column absorbs the padded no-op writes (same contract
+            # as the ingest scatter).
+            edges = edges.at[:, -1, :].set(0)
+            mask = mask.at[:, -1].set(0.0)
+            return edges, mask
+
+        s_edges, s_mask, _ = SH.engine_shardings(mesh)
+        jit_kwargs = {"out_shardings": (s_edges, s_mask)}
+        if self.donate:
+            # Donating is safe HERE: the inputs are the shadow buffers (or a
+            # previous chunk's output), which nothing else references.
+            program = donate_jit(splice, donate_argnums=(0, 1), **jit_kwargs)
+        else:
+            program = jax.jit(splice, **jit_kwargs)
+        return self._programs.put(key, program)
+
+    def _full_key(self, mode: str, k: int, k_pad: int, e_cap: int, mesh):
+        o = self.orderer
+        ks = FRK.eval_ks_full(o.config.k_min, o.config.k_max, k)
+        use_pallas = SH.graph_axis_size(mesh) == 1 and compat.process_count() == 1
+        return ("full_reorder", mode, k, k_pad, e_cap, ks, use_pallas, mesh)
+
+    def _full_program(self, mode: str, k: int, k_pad: int, e_cap: int, mesh):
+        """Whole-graph re-order program — the span program generalized to
+        s = k (kernels/full_reorder.py), with one structural difference: the
+        input buffers are NOT donated. The outputs are fresh arrays — the
+        shadow half of the double buffer — so ingest keeps scattering into
+        the live pack while this runs.
+
+        Modes: ``apply`` applies the host geo_order candidate verbatim (the
+        oracle path); ``greedy`` recomputes the step-parallel greedy on
+        device with the mirror's never-worse selection as a scalar operand;
+        ``select`` scores greedy vs candidate on device (differential)."""
+        spr = e_cap - 1
+        cap = k * spr
+        key = self._full_key(mode, k, k_pad, e_cap, mesh)
+        ks, use_pallas = key[5], key[6]
+        cached = self._programs.get(key)
+        if cached is not None:
+            return cached
+        num_vertices = self.num_vertices
+
+        def rebuild(edges, mask, rows, cand, *rest):
+            blk_e = edges[rows]  # (k, e_cap, 2) — every region's row
+            blk_m = mask[rows]
+            u = blk_e[:, :spr, 0].reshape(cap)
+            v = blk_e[:, :spr, 1].reshape(cap)
+            valid = blk_m[:, :spr].reshape(cap) > 0
+            n = jnp.sum(valid.astype(jnp.int32))
+            if mode == "apply":
+                order = cand
+            elif mode == "select":
+                alpha, beta, delta, permpos = rest
+                order = FRK.select_full_order_device(
+                    u, v, valid, num_vertices, cand, ks,
+                    alpha[0], beta[0], delta[0], permpos, use_pallas=use_pallas,
+                )
+            else:  # greedy: the mirror's exact decision arrives as an operand
+                use_cand, alpha, beta, delta, permpos = rest
+                order = jax.lax.cond(
+                    use_cand[0] > 0,
+                    lambda: cand,
+                    lambda: FRK.full_order_device(
+                        u, v, valid, num_vertices, alpha[0], beta[0], delta[0], permpos
+                    ),
+                )
+            tgt = SRK.splice_targets_device(n, k, spr, cap)
+            j = jnp.arange(cap, dtype=jnp.int32)
+            live = j < n
+            new_u = jnp.zeros(cap + 1, jnp.int32).at[tgt].set(
+                jnp.where(live, u[order], 0)
+            )[:cap]
+            new_v = jnp.zeros(cap + 1, jnp.int32).at[tgt].set(
+                jnp.where(live, v[order], 0)
+            )[:cap]
+            new_m = jnp.zeros(cap + 1, jnp.float32).at[tgt].set(
+                live.astype(jnp.float32)
+            )[:cap]
+            blk = jnp.stack([new_u.reshape(k, spr), new_v.reshape(k, spr)], axis=-1)
+            blk = jnp.concatenate([blk, jnp.zeros((k, 1, 2), jnp.int32)], axis=1)
+            mblk = jnp.concatenate(
+                [new_m.reshape(k, spr), jnp.zeros((k, 1), jnp.float32)], axis=1
+            )
+            return edges.at[rows].set(blk), mask.at[rows].set(mblk)
+
+        s_edges, s_mask, _ = SH.engine_shardings(mesh)
+        # No donation by design — see the docstring.
+        program = jax.jit(rebuild, out_shardings=(s_edges, s_mask))
+        return self._programs.put(key, program)
 
     def _partial_rung(self) -> None:
         """Execute the partial rung in the configured mode. Host bookkeeping

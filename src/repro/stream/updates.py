@@ -92,16 +92,36 @@ class SyntheticStream:
         delete_frac: float = 0.25,
         triadic_frac: float = 0.5,
         seed: int = 0,
+        burst_every: int = 0,
+        burst_factor: int = 4,
+        burst_delete_frac: float | None = None,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         if not 0.0 <= delete_frac < 1.0:
             raise ValueError("delete_frac must be in [0, 1)")
+        if burst_every < 0:
+            raise ValueError("burst_every must be >= 0 (0 = no bursts)")
+        if burst_factor < 1:
+            raise ValueError("burst_factor must be >= 1")
+        if burst_delete_frac is not None and not 0.0 <= burst_delete_frac < 1.0:
+            raise ValueError("burst_delete_frac must be in [0, 1)")
         self.num_vertices = base.num_vertices
         self.batch_size = int(batch_size)
         self.delete_frac = float(delete_frac)
         self.triadic_frac = float(triadic_frac)
         self.seed = int(seed)
+        # Bursty mode: every ``burst_every``-th batch (the last of each
+        # window) is ``burst_factor``× the base size at ``burst_delete_frac``
+        # (default: the base delete_frac) — churn spikes that stress the
+        # rebuild-under-ingest delta-splice path. Burst SHAPE is a pure
+        # function of the batch index, so the stateless-replay contract is
+        # untouched: same (seed, b) → same batch, bursts included.
+        self.burst_every = int(burst_every)
+        self.burst_factor = int(burst_factor)
+        self.burst_delete_frac = (
+            self.delete_frac if burst_delete_frac is None else float(burst_delete_frac)
+        )
         self._next_batch = 0
         # Live edge set: list for O(1) hash-indexed delete picks (swap-remove),
         # set for O(1) membership.
@@ -144,6 +164,23 @@ class SyntheticStream:
     def num_edges(self) -> int:
         return len(self._edges)
 
+    def is_burst(self, b: int) -> bool:
+        """Whether batch ``b`` is a burst — the last batch of each
+        ``burst_every`` window, a pure function of the index."""
+        return self.burst_every > 0 and b % self.burst_every == self.burst_every - 1
+
+    def batch_shape(self, b: int) -> tuple[int, int]:
+        """(n_del, n_ins) of batch ``b`` before edge-set clamping — the
+        deterministic size plan (bursts included)."""
+        if self.is_burst(b):
+            size = self.batch_size * self.burst_factor
+            frac = self.burst_delete_frac
+        else:
+            size = self.batch_size
+            frac = self.delete_frac
+        n_del = int(size * frac)
+        return n_del, size - n_del
+
     def batch(self, index: int | None = None) -> EdgeUpdateBatch:
         """Generate the next batch (or assert the caller is replaying in
         order: batches must be consumed sequentially because deletes index the
@@ -153,8 +190,7 @@ class SyntheticStream:
             raise ValueError(
                 f"stream batches must be consumed in order (next={self._next_batch}, got {b})"
             )
-        n_del = int(self.batch_size * self.delete_frac)
-        n_ins = self.batch_size - n_del
+        n_del, n_ins = self.batch_shape(b)
         # Deletes are drawn FIRST, from the pre-batch live set — the same
         # delete-then-insert order IncrementalOrderer.apply uses — so the
         # generator's live set and a consumer's can never diverge (an edge
@@ -172,7 +208,9 @@ class SyntheticStream:
             deletes.append(e)
         inserts: list[tuple[int, int]] = []
         pos = 0
-        while len(inserts) < n_ins and pos < 16 * self.batch_size:
+        # Scan bound scales with the batch's own size so bursts aren't
+        # starved; identical to the historical 16×batch_size off-burst.
+        while len(inserts) < n_ins and pos < 16 * max(self.batch_size, n_del + n_ins):
             e = self._candidate_insert(b, pos)
             pos += 1
             if e is None:  # _present already covers within-batch dedup

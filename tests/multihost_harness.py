@@ -53,6 +53,8 @@ GRAPH_EDGE_FACTOR = 6
 GRAPH_SEED = 0
 STREAM_SEED = 1
 STREAM_BATCH = 64
+REBUILD_SEED = 2
+REBUILD_FLIGHT = 1
 
 
 def stream_config() -> StreamConfig:
@@ -61,6 +63,14 @@ def stream_config() -> StreamConfig:
     acceptance wants the DEVICE span-repair rung exercised across the process
     boundary, not drowned by resync uploads."""
     return StreamConfig(full_drift=99.0, span_regions=2)
+
+
+def rebuild_config() -> StreamConfig:
+    """Rebuild phase config: both thresholds parked high so the natural drift
+    never escalates — the ISSUE-6 acceptance forces exactly ONE async full
+    rebuild at a scripted batch, keeping the event log byte-reproducible for
+    the parent's host replay."""
+    return StreamConfig(partial_drift=40.0, full_drift=50.0)
 
 
 def force_partial_baseline(orderer: IncrementalOrderer) -> None:
@@ -187,6 +197,53 @@ def run_stream_phase(g, src, dst, mesh, store: dict) -> dict:
     }
 
 
+def run_rebuild_phase(g, src, dst, mesh, store: dict) -> dict:
+    """ISSUE-6 acceptance: one async full rebuild (geo mode, flight 1) flies
+    across the 2-process mesh — dispatch on batch 2, flight through batch 3,
+    commit with a delta splice, two quiet batches around it. The parent
+    replays the identical protocol host-side and byte-compares the pack."""
+    pid = jax.process_index()
+    o = IncrementalOrderer(
+        src.astype(np.int64), dst.astype(np.int64), g.num_vertices,
+        regions=8, config=rebuild_config(),
+    )
+    eng = StreamingEngine(o, mesh, full_rebuild="geo", rebuild_flight=REBUILD_FLIGHT)
+    ctl = ec.ElasticController(8)
+    ctl.attach_stream(eng)
+    stream = SyntheticStream(g, batch_size=STREAM_BATCH, seed=REBUILD_SEED)
+    states = []
+    for b in range(5):
+        if b == 2:
+            o.drift = lambda: 99.0  # force the dispatch on this batch only
+        ctl.ingest(stream.batch())
+        if b == 2:
+            del o.drift
+        states.append(eng.rebuild_state)
+    log(pid, f"rebuild script done: states={states}")
+    eng.verify_bit_identity()  # in-child check (collective unshard)
+    log(pid, "rebuild in-child bit identity OK")
+
+    save_blocks(store, "rebuild_edges", eng.data.edges)
+    save_blocks(store, "rebuild_mask", eng.data.mask)
+    rebuilds = [e for e in ctl.events if e.kind == "full_rebuild"]
+    return {
+        "num_edges": o.num_edges,
+        "states": states,
+        "events": [{"kind": e.kind, "seq": e.seq} for e in ctl.events],
+        "rebuilds": [
+            {
+                "mode": e.mode, "committed": e.committed, "aborted": e.aborted,
+                "snapshot_edges": e.snapshot_edges,
+                "replayed_batches": e.replayed_batches,
+                "splice_ops": e.splice_ops, "flight_batches": e.flight_batches,
+                "seq": e.seq,
+            }
+            for e in rebuilds
+        ],
+        "program_cache": eng.program_cache_counters(),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", required=True, help="directory for per-process results")
@@ -207,6 +264,7 @@ def main() -> None:
         "rescale": run_rescale_phase(src, dst, g.num_vertices, mesh, store),
     }
     record["stream"] = run_stream_phase(g, src, dst, mesh, store)
+    record["rebuild"] = run_rebuild_phase(g, src, dst, mesh, store)
 
     os.makedirs(args.out, exist_ok=True)
     np.savez(os.path.join(args.out, f"proc{pid}.npz"), **store)

@@ -1,0 +1,386 @@
+"""Async on-mesh full rebuild (DESIGN.md §11): the whole-graph GEO re-order
+kernel's host/device bit identity, the double-buffered dispatch → flight →
+commit protocol through the StreamingEngine + ElasticController, the abort
+path, the anticipation/shadow extensions of the escalation ladder, and an
+interleaving property test mixing async rebuilds with ingest and rescales."""
+import numpy as np
+import pytest
+from conftest import hypothesis_or_stub
+
+from repro.core import ordering
+from repro.core.graph import rmat_graph
+from repro.elastic import controller as ec
+from repro.kernels import full_reorder as FRK
+from repro.launch import mesh as MM
+from repro.stream import (
+    IncrementalOrderer,
+    StreamConfig,
+    StreamingEngine,
+    SyntheticStream,
+)
+
+given, settings, st = hypothesis_or_stub()
+
+
+@pytest.fixture(scope="module")
+def ordered():
+    g = rmat_graph(7, 6, seed=0)
+    order = ordering.geo_order(g, seed=0)
+    return g, g.src[order].astype(np.int64), g.dst[order].astype(np.int64)
+
+
+def make_orderer(ordered, regions=4, **cfg):
+    g, src, dst = ordered
+    config = StreamConfig(**cfg) if cfg else StreamConfig()
+    return g, IncrementalOrderer(src, dst, g.num_vertices, regions=regions, config=config)
+
+
+def drifted_slots(ordered, batches=6, seed=5):
+    """Slot arrays with real drift + dead slots: stream a few batches."""
+    g, o = make_orderer(ordered)
+    stream = SyntheticStream(g, batch_size=48, delete_frac=0.3, seed=seed)
+    for _ in range(batches):
+        o.apply(stream.batch())
+    o.needs_resync = False
+    o.drain_ops()
+    return g, o
+
+
+# --------------------------------------------------------- kernel differential
+def test_geo_full_candidate_matches_host_geo_order(ordered):
+    """The geo candidate IS host geo_order expressed over slot ids: applying
+    it to the slot arrays reproduces geo_order's edge sequence exactly, with
+    dead slots packed last."""
+    g, o = drifted_slots(ordered)
+    cand = FRK.geo_full_candidate(o.slot_src, o.slot_dst, o.slot_valid, g.num_vertices)
+    cap = o.slot_valid.shape[0]
+    assert sorted(cand.tolist()) == list(range(cap))  # a true permutation
+    n_live = int(o.slot_valid.sum())
+    live = cand[:n_live]
+    assert o.slot_valid[live].all() and not o.slot_valid[cand[n_live:]].any()
+    gg = o.graph()
+    order = ordering.geo_order(gg, o.config.k_min, o.config.k_max, seed=0)
+    np.testing.assert_array_equal(o.slot_src[live], gg.src[order])
+    np.testing.assert_array_equal(o.slot_dst[live], gg.dst[order])
+
+
+def test_full_order_host_device_bit_identity(ordered):
+    """The step-parallel greedy: numpy mirror == traced program, byte for
+    byte, dead slots included (they sort last)."""
+    g, o = drifted_slots(ordered)
+    u, v, valid = o.slot_src, o.slot_dst, o.slot_valid
+    n_live = int(valid.sum())
+    deg = np.bincount(np.concatenate([u[valid], v[valid]]), minlength=1)
+    alpha, beta, delta = FRK.greedy_params(
+        n_live, o.config.k_min, o.config.k_max, int(deg.max())
+    )
+    permpos = FRK.fallback_positions(g.num_vertices)
+    host = FRK.full_order_host(u, v, valid, g.num_vertices, alpha, beta, delta, permpos)
+    dev = np.asarray(
+        FRK.full_order_device(
+            u.astype(np.int32), v.astype(np.int32), valid, g.num_vertices,
+            np.int32(alpha), np.int32(beta), np.int32(delta), permpos.astype(np.int32),
+        )
+    )
+    np.testing.assert_array_equal(host, dev.astype(np.int64))
+    assert valid[host[:n_live]].all() and not valid[host[n_live:]].any()
+
+
+def test_select_full_order_never_worse_than_incumbent(ordered):
+    """Candidate selection with the incumbent (identity) as the candidate:
+    the chosen order's exact objective can never exceed the incumbent's."""
+    g, o = drifted_slots(ordered)
+    u, v, valid = o.slot_src, o.slot_dst, o.slot_valid
+    n_live = int(valid.sum())
+    deg = np.bincount(np.concatenate([u[valid], v[valid]]), minlength=1)
+    alpha, beta, delta = FRK.greedy_params(
+        n_live, o.config.k_min, o.config.k_max, int(deg.max())
+    )
+    permpos = FRK.fallback_positions(g.num_vertices)
+    ks = FRK.eval_ks_full(o.config.k_min, o.config.k_max, o.regions)
+    incumbent = FRK.identity_candidate(valid)
+    chosen, chose_cand = FRK.select_full_order_host(
+        u, v, valid, g.num_vertices, incumbent, ks, alpha, beta, delta, permpos
+    )
+    obj_chosen = FRK.full_objective_host(u, v, valid, chosen, ks)
+    obj_inc = FRK.full_objective_host(u, v, valid, incumbent, ks)
+    assert obj_chosen <= obj_inc
+    if chose_cand:  # the candidate wins only on a STRICT improvement
+        assert obj_inc < FRK.full_objective_host(
+            u, v, valid,
+            FRK.full_order_host(u, v, valid, g.num_vertices, alpha, beta, delta, permpos),
+            ks,
+        )
+
+
+def test_greedy_params_rejects_int32_overflow():
+    with pytest.raises(ValueError, match="overflow int32"):
+        FRK.greedy_params(2**28, 2, 64, max_degree=1000)
+
+
+# High thresholds so ONLY the mocked drift escalates — the forced-cycle tests
+# need the rung count under their control, not the stream's natural drift.
+QUIET = dict(partial_drift=40.0, full_drift=50.0)
+
+
+# ----------------------------------------------- engine: flight 0 ≡ host mode
+def test_flight_zero_geo_commit_matches_host_full_rebuild(ordered):
+    """rebuild_flight=0 commits inside one monitor call — the synchronous
+    oracle-equivalence mode: the committed slot arrays equal a host-mode
+    full_rebuild of an identically-streamed twin, byte for byte."""
+    g, src, dst = ordered
+    o_async = IncrementalOrderer(src, dst, g.num_vertices, regions=4, config=StreamConfig(**QUIET))
+    o_host = IncrementalOrderer(src, dst, g.num_vertices, regions=4, config=StreamConfig(**QUIET))
+    eng = StreamingEngine(
+        o_async, MM.make_graph_mesh(1), full_rebuild="geo", rebuild_flight=0
+    )
+    s1 = SyntheticStream(g, batch_size=48, seed=5)
+    s2 = SyntheticStream(g, batch_size=48, seed=5)
+    for _ in range(4):
+        eng.ingest(s1.batch())
+        o_host.apply(s2.batch())
+        o_host.needs_resync = False
+        o_host.drain_ops()
+    o_async.drift = lambda: 99.0  # force the full rung
+    assert eng.monitor() == "full"
+    del o_async.drift
+    o_host.full_rebuild()
+    o_host.needs_resync = False
+    np.testing.assert_array_equal(o_async.slot_src, o_host.slot_src)
+    np.testing.assert_array_equal(o_async.slot_dst, o_host.slot_dst)
+    np.testing.assert_array_equal(o_async.slot_valid, o_host.slot_valid)
+    eng.verify_bit_identity()
+    (rec,) = eng.drain_rebuild_events()
+    assert rec["committed"] and not rec["aborted"]
+    assert rec["flight_batches"] == 0 and rec["replayed_batches"] == 0
+
+
+# ------------------------------------------- engine: async dispatch → commit
+def run_async_cycle(ordered, mode="geo", flight=2, batches=8, seed=7):
+    """Drive one forced async rebuild cycle through the controller: drift is
+    pinned high for the dispatch batch only, so exactly one rebuild flies."""
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=4, config=StreamConfig(**QUIET))
+    eng = StreamingEngine(o, MM.make_graph_mesh(1), full_rebuild=mode, rebuild_flight=flight)
+    ctl = ec.ElasticController(4)
+    ctl.attach_stream(eng)
+    stream = SyntheticStream(g, batch_size=48, seed=seed)
+    events = []
+    for b in range(batches):
+        if b == 2:
+            o.drift = lambda: 99.0  # escalate: dispatch on this batch
+        events.append(ctl.ingest(stream.batch()))
+        if b == 2:
+            del o.drift
+        eng.verify_bit_identity()
+    return o, eng, ctl, events
+
+
+def test_async_rebuild_dispatch_flight_commit_protocol(ordered):
+    o, eng, ctl, events = run_async_cycle(ordered, flight=2)
+    # Batch 2 dispatches (rung 'full', non-blocking), 3 flies, 4 commits.
+    assert events[2].escalation == "full" and events[2].rebuild_state == "dispatch"
+    assert events[2].repair == "dispatch" and events[2].rebuilds_in_flight == 1
+    assert events[3].escalation == "none" and events[3].rebuild_state == "flight"
+    assert events[3].rebuilds_in_flight == 1
+    assert events[4].escalation == "full" and events[4].rebuild_state == "commit"
+    assert events[4].repair == "geo" and events[4].rebuilds_in_flight == 0
+    assert events[4].rebuild_s > 0  # the commit's blocked cost is on ITS batch
+    # The completed rebuild is its own event, sequenced just before batch 4's.
+    rebuilds = [e for e in ctl.events if e.kind == "full_rebuild"]
+    assert len(rebuilds) == 1
+    rb = rebuilds[0]
+    assert rb.committed and not rb.aborted and rb.mode == "geo"
+    assert rb.flight_batches == 2 and rb.replayed_batches == 2
+    assert rb.snapshot_edges > 0 and rb.dispatch_s > 0 and rb.commit_s > 0
+    assert rb.seq == events[4].seq - 1
+    # One strictly monotonic seq across ingest + rebuild events.
+    assert [e.seq for e in ctl.events] == list(range(len(ctl.events)))
+    # The committed order re-baselined the drift monitor.
+    assert o.drift() < 99.0
+
+
+def test_async_rebuild_differential_mode_self_verifies(ordered):
+    """Differential mode scores geo against the greedy and bit-verifies at
+    commit (verify_bit_identity raises inside _commit_rebuild on divergence)."""
+    o, eng, ctl, events = run_async_cycle(ordered, mode="differential", flight=1)
+    rebuilds = [e for e in ctl.events if e.kind == "full_rebuild"]
+    assert len(rebuilds) == 1 and rebuilds[0].committed
+    assert rebuilds[0].mode == "differential" and rebuilds[0].flight_batches == 1
+    assert events[3].repair == "differential"
+
+
+def test_async_rebuild_device_mode_commits_and_stays_bit_identical(ordered):
+    """Device mode (greedy vs incumbent): whatever the selection picked, the
+    device pack must mirror the host slots byte-for-byte after the commit —
+    run_async_cycle verifies after every batch."""
+    o, eng, ctl, events = run_async_cycle(ordered, mode="device", flight=2)
+    rebuilds = [e for e in ctl.events if e.kind == "full_rebuild"]
+    assert len(rebuilds) == 1 and rebuilds[0].committed
+    assert events[4].repair == "device"
+
+
+def test_async_rebuild_abort_on_rescale(ordered):
+    """A rescale mid-flight voids the snapshot: the rebuild aborts (bit
+    identity intact), and the ladder re-fires once drift is measured again."""
+    g, src, dst = ordered
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=4, config=StreamConfig(**QUIET))
+    eng = StreamingEngine(o, MM.make_graph_mesh(1), full_rebuild="geo", rebuild_flight=3)
+    ctl = ec.ElasticController(4)
+    ctl.attach_stream(eng)
+    stream = SyntheticStream(g, batch_size=48, seed=11)
+    ctl.ingest(stream.batch())
+    o.drift = lambda: 99.0
+    ev = ctl.ingest(stream.batch())  # dispatch
+    assert ev.rebuild_state == "dispatch" and eng.rebuilds_in_flight == 1
+    scale = ctl.add_hosts(2)  # rescale 4 → 6 mid-flight
+    assert scale.executed and eng.rebuilds_in_flight == 0
+    eng.verify_bit_identity()
+    ev2 = ctl.ingest(stream.batch())  # drift still high: ladder re-fires
+    del o.drift
+    assert ev2.rebuild_state == "dispatch" and eng.rebuilds_in_flight == 1
+    rebuilds = [e for e in ctl.events if e.kind == "full_rebuild"]
+    assert len(rebuilds) == 1
+    rb = rebuilds[0]
+    assert rb.aborted and not rb.committed
+    assert rb.replayed_batches == 0 and rb.splice_ops == 0 and rb.commit_s == 0.0
+    # The abort was sequenced before the re-dispatch batch's IngestEvent.
+    assert rb.seq < ev2.seq
+    assert [e.seq for e in ctl.events] == list(range(len(ctl.events)))
+
+
+def test_escalation_suppressed_while_rebuild_in_flight(ordered):
+    """Mid-flight monitors report 'none' even at full-rung drift: the drift
+    being measured is already being repaired."""
+    o, eng, ctl, events = run_async_cycle(ordered, flight=2)
+    assert events[3].escalation == "none" and events[3].repair == ""
+
+
+# ------------------------------------- ladder: anticipation + partial shadow
+def test_escalation_full_lookahead_boundary(ordered):
+    """The full threshold stays strict under anticipation: d + lookahead must
+    EXCEED full_drift; the smallest representable excess fires."""
+    g, o = make_orderer(ordered)
+    full = o.config.full_drift
+    o.drift = lambda: full  # exactly AT the threshold
+    assert o.escalation() == "partial"  # strict: no fire without anticipation
+    assert o.escalation(full_lookahead=1e-9) == "full"  # any excess fires
+    o.drift = lambda: full - 0.02
+    assert o.escalation(full_lookahead=0.01) == "partial"  # projection too short
+    assert o.escalation(full_lookahead=0.05) == "full"
+    del o.drift
+
+
+def test_escalation_partial_shadow_suppression(ordered):
+    """A partial in the shadow of a projected full reports 'none'; a shadow
+    short of the full threshold leaves the partial decision untouched; an
+    actual full always outranks the shadow."""
+    g, o = make_orderer(ordered)
+    cfg = o.config
+    d = cfg.partial_drift + 0.01
+    o.drift = lambda: d
+    gap = cfg.full_drift - d
+    assert o.escalation() == "partial"  # no shadow: classic decision
+    assert o.escalation(partial_shadow=gap) == "partial"  # projects exactly AT
+    assert o.escalation(partial_shadow=gap + 0.01) == "none"  # suppressed
+    o.drift = lambda: cfg.full_drift + 0.01
+    assert o.escalation(partial_shadow=99.0) == "full"
+    del o.drift
+
+
+def test_full_via_lookahead_resets_partial_cooldown(ordered):
+    """An anticipated full passes through maybe_escalate like a classic one:
+    it ignores an open cooldown window and resets it."""
+    g, o = make_orderer(ordered, partial_cooldown=3)
+    o.drift = lambda: o.config.partial_drift + 0.01
+    ran = {"partial": 0, "full": 0}
+    pfn = lambda: ran.__setitem__("partial", ran["partial"] + 1)
+    ffn = lambda: ran.__setitem__("full", ran["full"] + 1)
+    assert o.maybe_escalate(partial_fn=pfn, full_fn=ffn) == "partial"  # opens window
+    assert o.maybe_escalate(partial_fn=pfn, full_fn=ffn) == "none"  # cooling
+    look = o.config.full_drift  # enough to project any drift past the threshold
+    assert o.maybe_escalate(partial_fn=pfn, full_fn=ffn, full_lookahead=look) == "full"
+    assert o.maybe_escalate(partial_fn=pfn, full_fn=ffn) == "partial"  # window reset
+    assert ran == {"partial": 2, "full": 1}
+    del o.drift
+
+
+def test_partial_shadow_does_not_consume_cooldown(ordered):
+    """A shadow-suppressed partial reports 'none' WITHOUT opening or draining
+    the hysteresis window — suppression is a decision, not a firing."""
+    g, o = make_orderer(ordered, partial_cooldown=2)
+    o.drift = lambda: o.config.partial_drift + 0.01
+    ran = []
+    shadow = o.config.full_drift  # projects any drift past the threshold
+    assert o.maybe_escalate(partial_fn=lambda: ran.append(1), partial_shadow=shadow) == "none"
+    assert o.maybe_escalate(partial_fn=lambda: ran.append(1)) == "partial"  # fires now
+    assert ran == [1]
+    del o.drift
+
+
+# --------------------------------------------- interleaving property test
+def _check_rebuild_interleaving(seed: int, steps: int = 10):
+    """Random interleaving of ingest / scale_out / scale_in with REAL async
+    rebuilds (geo mode, flight 1, baseline pinned so the ladder fires): after
+    every event the sharded pack equals the host slot oracle byte-for-byte,
+    the shared seq stays strictly monotonic across all three event kinds, and
+    every completed rebuild either committed or was aborted by a rescale."""
+    g = rmat_graph(6, 4, seed=1)
+    order = ordering.geo_order(g, seed=0)
+    o = IncrementalOrderer(
+        g.src[order].astype(np.int64), g.dst[order].astype(np.int64),
+        g.num_vertices, regions=4,
+    )
+    o._baseline_kappa = o._kappa() / 1.5  # drift ≈ 1.5 → full rung fires
+    eng = StreamingEngine(o, MM.make_graph_mesh(1), full_rebuild="geo", rebuild_flight=1)
+    clock = [0.0]
+    ctl = ec.ElasticController(4, dead_after_s=5.0, clock=lambda: clock[0])
+    ctl.attach_stream(eng)
+    stream = SyntheticStream(g, batch_size=24, seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        alive = ctl.k
+        choices = ["ingest", "ingest", "scale_out"] + (["scale_in"] if alive > 2 else [])
+        action = choices[int(rng.integers(0, len(choices)))]
+        if action == "ingest":
+            ctl.ingest(stream.batch())
+        elif action == "scale_out":
+            ctl.add_hosts(int(rng.integers(1, 3)))
+        else:
+            victim = max(h for h, hs in ctl.hosts.items() if hs.alive)
+            clock[0] += ctl.dead_after_s + 1.0
+            for h, hs in ctl.hosts.items():
+                if hs.alive and h != victim:
+                    ctl.heartbeat(h, 1)
+            assert ctl.poll() is not None
+        eng.verify_bit_identity()
+        assert eng.k == ctl.k == o.regions
+    assert [e.seq for e in ctl.events] == list(range(len(ctl.events)))
+    rebuilds = [e for e in ctl.events if e.kind == "full_rebuild"]
+    for rb in rebuilds:
+        assert rb.committed != rb.aborted or not rb.committed  # never both
+        if rb.committed:
+            assert rb.flight_batches >= 1  # flight=1: commit is never same-batch
+        else:
+            assert rb.aborted  # only a rescale abort yields an uncommitted one
+    return [e.kind for e in ctl.events]
+
+
+@given(seed=st.integers(0, 24))
+@settings(max_examples=6, deadline=None)
+def test_rebuild_interleaving_matches_oracle_and_seq_monotonic(seed):
+    _check_rebuild_interleaving(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 4, 11])
+def test_rebuild_interleaving_deterministic(seed):
+    kinds = _check_rebuild_interleaving(seed)
+    assert "ingest" in kinds
+
+
+def test_rebuild_interleaving_seeds_exercise_rebuilds():
+    """The fallback seeds must actually complete at least one rebuild AND one
+    abort across the set (otherwise the deterministic variant silently stops
+    covering the async machinery)."""
+    kinds = sum((_check_rebuild_interleaving(s) for s in (0, 4, 11)), [])
+    assert "full_rebuild" in kinds

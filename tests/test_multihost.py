@@ -203,6 +203,41 @@ def replay_stream_oracle(g, src, dst, pmap=None):
     return o, ctl
 
 
+def replay_rebuild_oracle(g, src, dst):
+    """Host-only replay of the harness's async-rebuild protocol (geo mode,
+    flight 1): the double-buffered begin/commit calls are pure host slot
+    operations, so the parent reproduces the committed layout without any
+    devices — the byte oracle for the cluster's spliced pack."""
+    from repro.kernels import full_reorder as FRK
+
+    o = IncrementalOrderer(
+        src.astype(np.int64), dst.astype(np.int64), g.num_vertices,
+        regions=8, config=H.rebuild_config(),
+    )
+    stream = SyntheticStream(g, batch_size=H.STREAM_BATCH, seed=H.REBUILD_SEED)
+
+    def step():
+        o.apply(stream.batch())
+        o.needs_resync = False
+        o.drain_ops()
+
+    step()
+    step()
+    step()  # batch 2: the engine's monitor dispatches AFTER this apply
+    u, v, valid = o.slot_src.copy(), o.slot_dst.copy(), o.slot_valid.copy()
+    o.begin_full_rebuild()
+    cand = FRK.geo_full_candidate(
+        u, v, valid, g.num_vertices, o.config.k_min, o.config.k_max
+    )
+    live = cand[: int(valid.sum())]
+    step()  # batch 3 flies — queued for the commit's replay
+    assert o.commit_full_rebuild(u[live], v[live])
+    o.needs_resync = False
+    o.drain_ops()
+    step()  # batch 4: quiet post-commit batch
+    return o
+
+
 # --------------------------------------------------------------------- tests
 def test_cluster_spans_two_processes(cluster):
     records, _ = cluster
@@ -309,6 +344,50 @@ def test_stream_events_ordered_and_consistent_across_processes(cluster):
             if e["kind"] in ("scale_out", "scale_in"):
                 assert e["executed"] is True
                 assert e["cross_process_bytes"] is not None and e["cross_process_bytes"] >= 0
+
+
+def test_async_rebuild_on_cluster_matches_host_replay_oracle(cluster):
+    """ISSUE-6 satellite: one async full rebuild (geo mode, flight 1) flew
+    across the 2-process mesh — dispatch, one flight batch, commit with a
+    delta splice — and the committed pack, reassembled from per-process shard
+    rows, equals the host-only replay byte for byte. Event logs agree across
+    processes and the RebuildEvent is sequenced at completion-commit time."""
+    records, shards = cluster
+    g, src, dst = H.build_ordered()
+    o = replay_rebuild_oracle(g, src, dst)
+
+    rb0 = records[0]["rebuild"]
+    for rec in records:
+        got = rec["rebuild"]
+        assert got == rb0  # every process saw the identical protocol
+        assert got["states"] == ["", "", "dispatch", "commit", ""]
+        assert got["num_edges"] == o.num_edges
+        (rb,) = got["rebuilds"]
+        assert rb["mode"] == "geo" and rb["committed"] and not rb["aborted"]
+        assert rb["flight_batches"] == H.REBUILD_FLIGHT
+        assert rb["replayed_batches"] == 1  # exactly the flight batch
+        assert rb["snapshot_edges"] > 0
+        # Completion-commit sequencing: the RebuildEvent lands immediately
+        # before the IngestEvent of the batch whose monitor committed it.
+        seqs = [e["seq"] for e in got["events"]]
+        assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+        kinds = [e["kind"] for e in got["events"]]
+        assert kinds.count("full_rebuild") == 1
+        assert kinds.index("full_rebuild") == 3  # after ingests 0-2, before #3
+        # The whole-graph program compiled ONCE; the splice stayed warm too.
+        pc = got["program_cache"]
+        assert pc["full_reorder"]["misses"] == 1 and pc["splice"]["misses"] == 1
+
+    pack = E.pack_slots(o.slot_src, o.slot_dst, o.slot_valid, o.regions, g.num_vertices)
+    want_edges, want_mask = np.asarray(pack.edges), np.asarray(pack.mask)
+    k_pad = SH.padded_partition_count(o.regions, G_DEVICES)
+    rows = [SH.partition_row(p, o.regions, G_DEVICES) for p in range(o.regions)]
+    glob_edges = np.zeros((k_pad,) + want_edges.shape[1:], want_edges.dtype)
+    glob_mask = np.zeros((k_pad,) + want_mask.shape[1:], want_mask.dtype)
+    glob_edges[rows] = want_edges
+    glob_mask[rows] = want_mask
+    np.testing.assert_array_equal(reassemble(shards, "rebuild_edges", k_pad), glob_edges)
+    np.testing.assert_array_equal(reassemble(shards, "rebuild_mask", k_pad), glob_mask)
 
 
 def test_stream_partial_escalations_ran_on_device_and_match_replay(cluster):

@@ -247,6 +247,59 @@ def test_program_cache_hits_shared_across_rescale_kinds():
     assert len(r._programs) == 2  # (4→6) and (6→4), each traced exactly once
 
 
+def test_program_cache_counters_per_kind():
+    """ISSUE-6 satellite: the cache counts hits/misses/evictions PER KIND so
+    event logs can prove an escalation never paid a compile. get-miss then
+    put then get-hit is the compile-once discipline; misses == compiles."""
+    c = ProgramCache(2)
+    key_a, key_b = ("scatter", 8, 64), ("span_repair", 8, 64)
+    assert c.get(key_a) is None  # miss counted
+    c.put(key_a, "a")
+    assert c.get(key_a) == "a"  # hit counted
+    assert c.get(key_b) is None
+    c.put(key_b, "b")
+    assert c.counters_snapshot() == {
+        "scatter": {"hits": 1, "misses": 1, "evictions": 0},
+        "span_repair": {"hits": 0, "misses": 1, "evictions": 0},
+    }
+    # Eviction is billed to the VICTIM's kind, at put time.
+    c.put(("splice", 8, 64), "s")  # evicts key_a (LRU: b was put after a's hit)
+    snap = c.counters_snapshot()
+    assert snap["scatter"]["evictions"] == 1
+    assert snap["span_repair"]["evictions"] == 0
+    assert "splice" not in snap  # put counts nothing for its own kind
+
+
+def test_program_cache_touch_counts_hit_only_when_present():
+    """touch refreshes recency and counts a hit IF present; an absent key
+    counts NOTHING — the warm-up probe must not inflate the miss count the
+    builder's own get-miss is about to record (misses == compiles)."""
+    c = ProgramCache(2)
+    key = ("full_reorder", 4, 128)
+    assert c.touch(key) is False
+    assert c.counters_snapshot() == {}  # absent touch left no trace
+    c.put(key, "p")
+    assert c.touch(key) is True
+    assert c.counters_snapshot() == {"full_reorder": {"hits": 1, "misses": 0, "evictions": 0}}
+    # touch refreshes recency like get: the untouched entry is the victim.
+    c.put(("other", 1), "q")
+    c.touch(key)
+    c.put(("third", 2), "r")
+    assert key in c and ("other", 1) not in c
+
+
+def test_program_cache_counters_snapshot_is_isolated():
+    """Snapshots attached to events must not alias the live counters."""
+    c = ProgramCache(2)
+    c.get(("scatter", 1))  # miss
+    snap = c.counters_snapshot()
+    c.put(("scatter", 1), "x")
+    c.get(("scatter", 1))  # hit after snapshot
+    assert snap == {"scatter": {"hits": 0, "misses": 1, "evictions": 0}}
+    snap["scatter"]["misses"] = 99  # mutating the snapshot …
+    assert c.counters["scatter"]["misses"] == 1  # … never reaches the cache
+
+
 # ------------------------------------------------------------------- data
 def test_data_pipeline_deterministic_and_elastic():
     dc = dp.DataConfig(vocab_size=1000, seq_len=16, global_batch=64)

@@ -92,6 +92,65 @@ def test_synthetic_stream_different_seeds_differ():
     assert a.insert.tolist() != b.insert.tolist()
 
 
+# ----------------------------------------------------- bursty stream (ISSUE 6)
+def test_synthetic_stream_burst_schedule_and_shapes():
+    """Bursts land on the LAST batch of each window (a pure function of the
+    index), are burst_factor× the base size, and draw deletes at
+    burst_delete_frac; off-burst batches keep the base plan."""
+    g = rmat_graph(7, 8, seed=1)
+    s = SyntheticStream(
+        g, batch_size=16, delete_frac=0.25, seed=5,
+        burst_every=4, burst_factor=3, burst_delete_frac=0.5,
+    )
+    for b in range(8):
+        assert s.is_burst(b) == (b % 4 == 3)
+        n_del, n_ins = s.batch_shape(b)
+        if s.is_burst(b):
+            assert n_del + n_ins == 16 * 3 and n_del == 24  # 48 × 0.5
+        else:
+            assert n_del + n_ins == 16 and n_del == 4  # 16 × 0.25
+        batch = s.batch()
+        # The graph is large enough that the plan is never clamped.
+        assert batch.num_deletes == n_del and batch.num_inserts == n_ins
+
+
+def test_synthetic_stream_burst_replay_is_stateless(ordered):
+    """The stateless-replay contract survives bursty mode: two generators
+    with the same (seed, burst plan) emit identical batches, and the orderer's
+    live set tracks the generator's through the churn spikes."""
+    g, src, dst = ordered
+    kw = dict(batch_size=24, delete_frac=0.3, seed=9, burst_every=3, burst_factor=4)
+    s1 = SyntheticStream(g, **kw)
+    s2 = SyntheticStream(g, **kw)
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=4)
+    for b in range(7):
+        b1, b2 = s1.batch(), s2.batch()
+        np.testing.assert_array_equal(b1.insert, b2.insert)
+        np.testing.assert_array_equal(b1.delete, b2.delete)
+        o.apply(b1)
+    got = {(int(a), int(c)) for a, c in zip(*o.snapshot())}
+    assert got == {tuple(e) for e in s1.edges().tolist()}
+
+
+def test_synthetic_stream_burst_default_delete_frac_and_off_mode():
+    g = rmat_graph(6, 4, seed=1)
+    s = SyntheticStream(g, batch_size=16, delete_frac=0.25, burst_every=2)
+    assert s.burst_delete_frac == 0.25  # defaults to the base delete_frac
+    off = SyntheticStream(g, batch_size=16)
+    assert not any(off.is_burst(b) for b in range(20))  # burst_every=0 = never
+    assert off.batch_shape(3) == (4, 12)
+
+
+def test_synthetic_stream_burst_validation():
+    g = rmat_graph(5, 4, seed=1)
+    with pytest.raises(ValueError, match="burst_every"):
+        SyntheticStream(g, burst_every=-1)
+    with pytest.raises(ValueError, match="burst_factor"):
+        SyntheticStream(g, burst_every=2, burst_factor=0)
+    with pytest.raises(ValueError, match="burst_delete_frac"):
+        SyntheticStream(g, burst_every=2, burst_delete_frac=1.0)
+
+
 # ------------------------------------------------------------------- orderer
 def test_orderer_snapshot_roundtrips_initial_order(ordered):
     g, src, dst = ordered

@@ -153,6 +153,41 @@ def test_sharded_escalation_resync_stays_bit_identical(ordered, mesh):
     eng.verify_bit_identity()
 
 
+def test_sharded_async_full_rebuild_commits_bit_identical(ordered, mesh):
+    """ISSUE-6 (sharded variant): the async full rebuild — dispatch against
+    shadow buffers, fly for one batch, commit with a delta splice — stays
+    byte-identical to the host slot oracle on an 8-device mesh, and both the
+    whole-graph re-order and splice programs land in the one program LRU."""
+    from repro.stream.incremental import StreamConfig
+
+    g, src, dst = ordered
+    o = IncrementalOrderer(
+        src, dst, g.num_vertices, regions=8,
+        config=StreamConfig(partial_drift=40.0, full_drift=50.0),
+    )
+    eng = StreamingEngine(o, mesh, full_rebuild="geo", rebuild_flight=1)
+    ctl = ec.ElasticController(8)
+    ctl.attach_stream(eng)
+    stream = SyntheticStream(g, batch_size=64, seed=7)
+    states = []
+    for b in range(4):
+        if b == 1:
+            o.drift = lambda: 99.0  # force the dispatch on this batch
+        ctl.ingest(stream.batch())
+        if b == 1:
+            del o.drift
+        states.append(eng.rebuild_state)
+        eng.verify_bit_identity()  # raises on any host/device divergence
+    assert states == ["", "dispatch", "commit", ""]
+    rebuilds = [e for e in ctl.events if e.kind == "full_rebuild"]
+    assert len(rebuilds) == 1
+    rb = rebuilds[0]
+    assert rb.committed and rb.flight_batches == 1 and rb.replayed_batches == 1
+    assert [e.seq for e in ctl.events] == list(range(len(ctl.events)))
+    kinds = {k[0] for k in eng._programs}
+    assert "full_reorder" in kinds and "splice" in kinds
+
+
 def test_controller_interleaves_sharded_ingest_and_scale(ordered, mesh):
     g, src, dst = ordered
     o = IncrementalOrderer(src, dst, g.num_vertices, regions=8)
