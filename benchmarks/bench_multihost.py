@@ -29,7 +29,7 @@ import numpy as np
 from repro.core import cep, ordering
 from repro.elastic.rescale_exec import EDGE_BYTES, ElasticRescaler
 
-from .common import bench_graph, emit
+from .common import bench_graph, emit, emit_peak_rss, parse_peak_rss, peak_rss_mb
 
 _JSON_MARK = "MULTIHOST-JSON:"
 N_PROCS = 2
@@ -168,6 +168,10 @@ def run(out_path: str = "BENCH_multihost.json") -> dict | None:
         float(np.mean(record["stream"]["ingest_us_per_batch"])),
         f"rescale_xproc_bytes={record['stream']['rescale']['cross_process_bytes']}",
     )
+    record["peak_rss_mb"] = {
+        "parent": round(peak_rss_mb(), 1),
+        "per_process": [parse_peak_rss(p.stdout) for p in res.procs],
+    }
     with open(out_path, "w") as fh:
         json.dump(record, fh, indent=2)
         fh.write("\n")
@@ -177,5 +181,6 @@ def run(out_path: str = "BENCH_multihost.json") -> dict | None:
 if __name__ == "__main__":
     if "--child" in sys.argv:
         print(_JSON_MARK + json.dumps(run_child()), flush=True)
+        emit_peak_rss()
     else:
         run()

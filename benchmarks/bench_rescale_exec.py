@@ -26,7 +26,7 @@ from repro.core import baselines, cep, ordering
 from repro.elastic.rescale_exec import EDGE_BYTES, ElasticRescaler, plan_segments
 from repro.graphs import engine as E
 
-from .common import bench_graph, emit
+from .common import bench_graph, emit, peak_rss_mb
 
 _CHILD_FLAG = "--multidevice-child"
 _JSON_MARK = "MULTIDEVICE-JSON:"
@@ -136,6 +136,7 @@ def run(scale: int = 12, edge_factor: int = 12, out_path: str = "BENCH_rescale.j
                 f"max_dev_ops={max(d['copy_ops'] for d in row['per_device'])}",
             )
 
+    record["peak_rss_mb"] = round(peak_rss_mb(), 1)
     with open(out_path, "w") as fh:
         json.dump(record, fh, indent=2)
         fh.write("\n")

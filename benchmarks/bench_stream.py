@@ -53,7 +53,7 @@ from repro.launch import mesh as MM
 from repro.stream import IncrementalOrderer, StreamingEngine, SyntheticStream
 from repro.stream.incremental import StreamConfig
 
-from .common import emit
+from .common import emit, peak_rss_mb
 
 K0, K_UP, K_DOWN = 8, 12, 6
 
@@ -400,6 +400,7 @@ def run(
         "rescale": rescales,
         "rebuild_under_burst": burst,
     }
+    result["peak_rss_mb"] = round(peak_rss_mb(), 1)
     if out_json:
         with open(out_json, "w") as f:
             json.dump(result, f, indent=1)

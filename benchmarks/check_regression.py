@@ -1,0 +1,108 @@
+"""Bench-regression gate over COMMITTED benchmark artifacts.
+
+CI reruns benchmarks only as smokes — the committed BENCH_*.json records are
+the performance baseline of record. This checker re-asserts the acceptance
+gates that those records claim, so a PR that edits an artifact (or regresses
+the code that regenerates one and commits the new numbers) fails loudly
+instead of silently shipping a worse baseline:
+
+* ``amortized.issue_target_within_3x_ingest`` must be true — the streaming
+  ladder's amortized batch wall stays within 3× of pure ingest.
+* ``quality.worst_ratio`` ≤ 1.10 — incremental order quality stays within
+  the RF acceptance margin of the from-scratch GEO oracle at every
+  checkpoint.
+
+Exit code 0 = all gates hold; 1 = a gate failed or the artifact is missing
+a gated field (a silently dropped gate is a failure, not a pass).
+
+Usage: ``python -m benchmarks.check_regression [BENCH_stream.json ...]``
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+DEFAULT_ARTIFACTS = ["BENCH_stream.json"]
+
+
+def _get(record: dict, dotted: str):
+    cur = record
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check_stream(record: dict) -> list[str]:
+    """Gate failures (empty = pass) for a BENCH_stream.json record."""
+    failures = []
+    within3x = _get(record, "amortized.issue_target_within_3x_ingest")
+    if within3x is None:
+        failures.append("amortized.issue_target_within_3x_ingest: missing")
+    elif within3x is not True:
+        failures.append(
+            "amortized.issue_target_within_3x_ingest is false "
+            f"(mean batch wall {_get(record, 'amortized.mean_batch_wall_ms')}ms "
+            f"vs ingest median {_get(record, 'ingest.median_ms')}ms)"
+        )
+    worst = _get(record, "quality.worst_ratio")
+    if worst is None:
+        failures.append("quality.worst_ratio: missing")
+    elif float(worst) > 1.10:
+        failures.append(f"quality.worst_ratio {worst} > 1.10")
+    return failures
+
+
+def check_outofcore(record: dict) -> list[str]:
+    """Gate failures for a BENCH_outofcore.json record: the small-scale
+    hierarchical-vs-in-core differential must hold on every tested graph,
+    and no stage may have materialized the full edge list in one process."""
+    failures = []
+    worst = _get(record, "quality.worst_ratio")
+    if worst is None:
+        failures.append("quality.worst_ratio: missing")
+    elif float(worst) > 1.10:
+        failures.append(f"quality.worst_ratio {worst} > 1.10")
+    bounded = _get(record, "memory.rss_bounded")
+    if bounded is None:
+        failures.append("memory.rss_bounded: missing")
+    elif bounded is not True:
+        failures.append("memory.rss_bounded is false")
+    return failures
+
+
+CHECKERS = {
+    "BENCH_stream.json": check_stream,
+    "BENCH_outofcore.json": check_outofcore,
+}
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or list(DEFAULT_ARTIFACTS)
+    rc = 0
+    for path in paths:
+        name = path.rsplit("/", 1)[-1]
+        checker = CHECKERS.get(name)
+        if checker is None:
+            print(f"{path}: no gates registered — nothing to check")
+            continue
+        try:
+            with open(path) as f:
+                record = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: FAIL — unreadable artifact ({e})")
+            rc = 1
+            continue
+        failures = checker(record)
+        if failures:
+            rc = 1
+            for msg in failures:
+                print(f"{path}: FAIL — {msg}")
+        else:
+            print(f"{path}: OK")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

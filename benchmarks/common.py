@@ -25,3 +25,38 @@ def bench_graph(scale: int = 12, edge_factor: int = 12, seed: int = 0):
     from repro.core.graph import rmat_graph
 
     return rmat_graph(scale, edge_factor, seed=seed)
+
+
+# ---------------------------------------------------------------- peak RSS
+# Every BENCH_*.json artifact records peak RSS so memory regressions (the
+# out-of-core pipeline's whole point) are as visible as time regressions.
+RSS_MARK = "PEAK_RSS_MB:"
+
+
+def peak_rss_mb(include_children: bool = True) -> float:
+    """Peak resident set size of this process (and, by default, the largest
+    of its reaped children — covers spawn_local_cluster workers), in MiB.
+    Linux ru_maxrss is KiB."""
+    import resource
+
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if include_children:
+        peak = max(peak, resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss)
+    return peak / 1024.0
+
+
+def emit_peak_rss() -> None:
+    """Print this process's own peak RSS in the marker format cluster
+    parents parse out of child logs (``parse_peak_rss``)."""
+    print(f"{RSS_MARK}{peak_rss_mb(include_children=False):.1f}", flush=True)
+
+
+def parse_peak_rss(text: str):
+    """Largest ``PEAK_RSS_MB:`` marker in a child log, or None."""
+    best = None
+    for line in str(text).splitlines():
+        line = line.strip()
+        if line.startswith(RSS_MARK):
+            val = float(line[len(RSS_MARK):])
+            best = val if best is None else max(best, val)
+    return best

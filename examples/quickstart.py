@@ -136,6 +136,47 @@ print(f"proc {jax.process_index()}/{jax.process_count()}: 4->6 moved "
           f"(dispatch {rb['dispatch_s']*1e3:.0f}ms async, "
           f"commit {rb['commit_s']*1e3:.0f}ms blocked)")
 
+    # 9. OUT-OF-CORE PREPROCESS: past 2^23 edges the graph never exists as
+    #    one array. The input is a stateless shard PLAN (any process
+    #    regenerates any shard, or a strided sample, from the seed alone),
+    #    the GEO order is hierarchical — rank from the sample, equal-LOAD
+    #    chunk cuts (the load histogram is additive across shards), per-chunk
+    #    GEO — and a worker holds ONE ordered chunk at a time. Small scale
+    #    here so the in-core oracle is cheap to compare against; the 2^23+
+    #    2-process acceptance lives in tests/test_outofcore.py +
+    #    benchmarks/bench_outofcore.py (DESIGN.md §12).
+    from repro.core import hier_order as HO
+    from repro.data import shards as DS
+
+    plan = DS.RmatShardPlan(scale=10, edge_factor=8, seed=0, num_shards=4)
+    cfg = HO.HierConfig(num_chunks=4, seam_window=0, seed=0)
+    sample = DS.sample_edges(plan, stride=2)
+    rank = HO.locality_rank(sample, plan.num_vertices, cfg.seed)
+    load = sum(HO.chunk_load(rank, DS.shard_edges(plan, s))
+               for s in range(plan.num_shards))      # additive: psum on a cluster
+    splits = HO.chunk_splits(load, cfg)
+
+    def ordered_chunk(c):  # pure in (plan, rank, splits) — any worker, any chunk
+        shards = [DS.shard_edges(plan, s) for s in range(plan.num_shards)]
+        block = np.concatenate(
+            [es[HO.chunk_of_edges(splits, rank, es) == c] for es in shards])
+        return block[HO.order_edge_block(block, cfg, seed=cfg.seed + c)]
+
+    ordered = np.concatenate([ordered_chunk(c) for c in range(cfg.num_chunks)])
+    from repro.core.graph import Graph
+
+    key = ordered[:, 0] * np.int64(plan.num_vertices) + ordered[:, 1]
+    gg = Graph.from_edges(ordered[np.sort(np.unique(key, return_index=True)[1])],
+                          plan.num_vertices)
+    oo = ordering.geo_order(gg, seed=0)
+    rf_h = metrics.replication_factor_ordered(ordered[:, 0], ordered[:, 1],
+                                              16, plan.num_vertices)
+    rf_o = metrics.replication_factor_ordered(gg.src[oo], gg.dst[oo],
+                                              16, plan.num_vertices)
+    print(f"out-of-core hierarchical order: {ordered.shape[0]:,} edges in "
+          f"{cfg.num_chunks} chunks (workers hold 1 ordered chunk at a time), "
+          f"RF@16 {rf_h:.3f} vs in-core GEO {rf_o:.3f} ({rf_h/rf_o:.3f}x)")
+
 
 if __name__ == "__main__":
     main()

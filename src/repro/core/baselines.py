@@ -24,6 +24,7 @@ from .ordering import lift_vertex_order
 
 __all__ = [
     "splitmix64",
+    "mix_hash",
     "hash_1d",
     "hash_2d",
     "dbh",
@@ -41,11 +42,36 @@ __all__ = [
 def splitmix64(x: np.ndarray) -> np.ndarray:
     """Deterministic 64-bit mix hash (vectorized)."""
     x = np.asarray(x, dtype=np.uint64)
-    x = (x + np.uint64(0x9E3779B97F4A7C15)) & np.uint64(0xFFFFFFFFFFFFFFFF)
-    z = x
-    z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & np.uint64(0xFFFFFFFFFFFFFFFF)
-    z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & np.uint64(0xFFFFFFFFFFFFFFFF)
-    return z ^ (z >> np.uint64(31))
+    with np.errstate(over="ignore"):  # u64 wraparound is the point
+        x = (x + np.uint64(0x9E3779B97F4A7C15)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+        z = x
+        z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+        z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+        return z ^ (z >> np.uint64(31))
+
+
+_MIX_GOLD = np.uint64(0x9E3779B97F4A7C15)
+_MIX_FNV = np.uint64(0x100000001B3)
+_MIX_POS = np.uint64(1_000_003)
+
+
+def mix_hash(seed, major, minor, salt) -> np.ndarray:
+    """The ONE stateless draw every deterministic stream in the repo uses:
+    ``splitmix64(seed·φ + major·FNV + minor·1000003 + salt)`` over uint64
+    wraparound arithmetic. ``major``/``minor``/``salt`` may be scalars or
+    arrays (broadcast); the same (seed, major, minor, salt) always yields the
+    same draw, scalar or vectorized — stream/updates.SyntheticStream,
+    data/pipeline and data/shards all hash through here so their replay
+    contracts are one contract (property-tested in tests/test_outofcore.py).
+    """
+    with np.errstate(over="ignore"):  # u64 wraparound is the point
+        key = (
+            np.uint64(seed) * _MIX_GOLD
+            + np.asarray(major, dtype=np.uint64) * _MIX_FNV
+            + np.asarray(minor, dtype=np.uint64) * _MIX_POS
+            + np.asarray(salt, dtype=np.uint64)
+        )
+        return splitmix64(key)
 
 
 def hash_1d(g: Graph, k: int, seed: int = 0) -> np.ndarray:

@@ -14,7 +14,7 @@ import dataclasses
 import numpy as np
 
 from ..core import cep
-from ..core.baselines import splitmix64
+from ..core.baselines import mix_hash
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,13 +40,9 @@ def _tokens(dc: DataConfig, step: int, sample_ids: np.ndarray) -> np.ndarray:
     s = dc.seq_len + 1
     pos = np.arange(s, dtype=np.uint64)[None, :]
     sid = sample_ids.astype(np.uint64)[:, None]
-    key = (
-        np.uint64(dc.seed) * np.uint64(0x9E3779B97F4A7C15)
-        + sid * np.uint64(1_000_003)
-        + np.uint64(step) * np.uint64(0x100000001B3)
-        + pos
-    )
-    h = splitmix64(key)
+    # Same stateless draw as every other deterministic stream in the repo:
+    # (seed, step, sample, pos) through core.baselines.mix_hash.
+    h = mix_hash(dc.seed, step, sid, pos)
     rand_tok = (h % np.uint64(dc.vocab_size)).astype(np.int64)
     is_noise = (h >> np.uint64(32)) % np.uint64(NOISE_DENOM) == 0
     a = 7 if dc.vocab_size % 7 else 11

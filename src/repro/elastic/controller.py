@@ -89,6 +89,8 @@ class IngestEvent:
     rebuild_s: float = 0.0  # rebuild work inside THIS batch's monitor call
     rebuilds_in_flight: int = 0  # rebuilds still in flight after the batch
     program_cache: dict = dataclasses.field(default_factory=dict)
+    # Spill-layer traffic (stream/spill.py) — empty for streams without one.
+    spill: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,6 +284,7 @@ class ElasticController:
             rebuild_s=float(getattr(self.stream, "last_rebuild_s", 0.0)),
             rebuilds_in_flight=int(getattr(self.stream, "rebuilds_in_flight", 0)),
             program_cache=self._cache_counters(),
+            spill=dict(getattr(self.stream, "spill_counters", None) or {}),
         )
         self.events.append(ev)
         return ev

@@ -299,6 +299,82 @@ def pack_slots(
     )
 
 
+def local_slot_partitions(k: int, mesh) -> list[int]:
+    """Partition ids whose buffer rows this process's devices own, in row
+    order (ids ≥ k are the all-masked padding rows and are omitted). The
+    out-of-core commit materializes exactly these partitions' slots and no
+    others — the full partition list never exists on one host."""
+    from ..launch import multihost as MH
+
+    g = SH.graph_axis_size(mesh)
+    k_pad = SH.padded_partition_count(k, g)
+    s_edges, _, _ = SH.engine_shardings(mesh)
+    lo, hi = MH.addressable_row_block((k_pad, 1, 2), s_edges)
+    parts = [SH.row_partition(r, k, g) for r in range(lo, hi)]
+    return [p for p in parts if p < k]
+
+
+def pack_slots_sharded_stream(
+    part_fn,
+    k: int,
+    num_vertices: int,
+    mesh,
+    slots_per_region: int,
+) -> ShardedEngineData:
+    """``pack_slots`` committed shard by shard: no full-graph host array.
+
+    ``part_fn(p) -> (slot_src, slot_dst, slot_valid)`` produces ONE
+    partition's ``slots_per_region`` slots; it is called only for the
+    partitions this process's devices own (``local_slot_partitions``), one
+    at a time, into a staging buffer bounded by the local row block — which
+    is per-process device memory, the floor for any commit. Degrees and the
+    edge count are V-sized accumulators merged by ``psum_host``. Unsharded,
+    the result is byte-identical to ``pack_slots`` over the concatenated
+    slot arrays — the in-core oracle the out-of-core tests compare against.
+    """
+    from ..launch import multihost as MH
+
+    g = SH.graph_axis_size(mesh)
+    k_pad = SH.padded_partition_count(k, g)
+    spr = int(slots_per_region)
+    e_cap = spr + 1  # + scratch column, as pack_slots
+    s_edges, s_mask, s_vert = SH.engine_shardings(mesh)
+    lo, hi = MH.addressable_row_block((k_pad, e_cap, 2), s_edges)
+    edges_local = np.zeros((hi - lo, e_cap, 2), dtype=np.int32)
+    mask_local = np.zeros((hi - lo, e_cap), dtype=np.float32)
+    deg_local = np.zeros(num_vertices, dtype=np.float32)
+    count_local = 0
+    for r in range(lo, hi):
+        p = SH.row_partition(r, k, g)
+        if p >= k:
+            continue
+        slot_src, slot_dst, slot_valid = part_fn(p)
+        slot_valid = np.asarray(slot_valid, dtype=bool)
+        if slot_valid.shape[0] != spr:
+            raise ValueError(
+                f"partition {p}: got {slot_valid.shape[0]} slots, expected {spr}"
+            )
+        edges_local[r - lo, :spr, 0] = np.asarray(slot_src) * slot_valid
+        edges_local[r - lo, :spr, 1] = np.asarray(slot_dst) * slot_valid
+        mask_local[r - lo, :spr] = slot_valid.astype(np.float32)
+        np.add.at(deg_local, np.asarray(slot_src)[slot_valid], 1.0)
+        np.add.at(deg_local, np.asarray(slot_dst)[slot_valid], 1.0)
+        count_local += int(slot_valid.sum())
+    deg = MH.psum_host(deg_local, mesh)
+    total = int(MH.psum_host(np.asarray([count_local], dtype=np.int64), mesh)[0])
+    return ShardedEngineData(
+        edges=MH.put_global_local(edges_local, (k_pad, e_cap, 2), s_edges),
+        mask=MH.put_global_local(mask_local, (k_pad, e_cap), s_mask),
+        degrees=MH.put_global(deg, s_vert),
+        num_vertices=num_vertices,
+        k=k,
+        mesh=mesh,
+        mirrors=-1,
+        replication_factor=float("nan"),
+        num_edges=total,
+    )
+
+
 def _axis_and_mesh(data, mesh):
     """GAS dispatch: ShardedEngineData iterates over its own ``graph`` mesh;
     the replicated pack keeps the historical ``data``-axis path."""

@@ -64,6 +64,7 @@ from .span_reorder import (
 )
 
 __all__ = [
+    "greedy_fits_int32",
     "greedy_params",
     "fallback_positions",
     "eval_ks_full",
@@ -77,6 +78,18 @@ __all__ = [
 ]
 
 _PAD = int(PAD_ID)  # int32 max — dead-slot sort key
+
+
+def greedy_fits_int32(num_edges: int, k_min: int, k_max: int, max_degree: int) -> bool:
+    """Whether the step-parallel greedy's priorities α·D − β·M stay inside
+    int32 for this graph — the precondition of ``greedy_params``. Callers on
+    the rebuild path (stream/ingest, core/hier_order) test this and fall back
+    to a host ordering instead of aborting: out-of-core chunks routinely
+    cross the bound and a rebuild must degrade, not die."""
+    ks = np.arange(k_min, k_max + 1, dtype=np.int64)
+    alpha = int(np.sum(num_edges // ks))
+    beta = int(k_max - k_min)
+    return alpha * (int(max_degree) + 1) + beta * (num_edges + 1) < 2**31
 
 
 def greedy_params(

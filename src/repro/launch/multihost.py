@@ -60,6 +60,9 @@ __all__ = [
     "force_host_device_flags",
     "free_port",
     "put_global",
+    "put_global_local",
+    "addressable_row_block",
+    "psum_host",
     "host_read",
     "local_shard_rows",
     "spawn_local_cluster",
@@ -141,13 +144,62 @@ def put_global(host_arr, sharding):
     host_arr = np.asarray(host_arr)
     if compat.process_count() == 1:
         return jax.device_put(host_arr, sharding)
-    lo, hi = _addressable_row_block(host_arr.shape, sharding)
+    lo, hi = addressable_row_block(host_arr.shape, sharding)
     return compat.array_from_process_local_data(
         sharding, host_arr[lo:hi], host_arr.shape
     )
 
 
-def _addressable_row_block(global_shape, sharding) -> tuple[int, int]:
+def put_global_local(local_block, global_shape, sharding):
+    """Commit to ``sharding`` from ONLY this process's row block.
+
+    The out-of-core counterpart of ``put_global``: the caller materializes
+    just the rows this process's devices own (``addressable_row_block``
+    says which) instead of replicating the full host array — the whole
+    point of shard-streamed packing is that no process ever stages a
+    global-shape buffer. Single-process shardings take the direct
+    device_put path (the local block IS the array)."""
+    import jax
+
+    local_block = np.asarray(local_block)
+    lo, hi = addressable_row_block(global_shape, sharding)
+    if local_block.shape[0] != hi - lo or local_block.shape[1:] != tuple(global_shape[1:]):
+        raise ValueError(
+            f"local block shape {local_block.shape} does not cover rows "
+            f"[{lo}, {hi}) of global shape {tuple(global_shape)}"
+        )
+    if compat.process_count() == 1:
+        return jax.device_put(local_block, sharding)
+    return compat.array_from_process_local_data(sharding, local_block, tuple(global_shape))
+
+
+def psum_host(local, mesh) -> np.ndarray:
+    """Sum a host array over all processes of ``mesh`` (collective).
+
+    How the out-of-core pipeline merges V-sized accumulators — the chunk
+    load histogram, degree vectors, edge counts — that each process builds
+    from its own shards: the local value is staged as this process's row of
+    a (num_processes, …) device array sharded over ``graph`` and summed
+    after one all-gather. Single-process meshes return the input unchanged."""
+    local = np.asarray(local)
+    n_procs = compat.process_count()
+    if n_procs == 1:
+        return local.copy()
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    g = SH.graph_axis_size(mesh)
+    devs_per_proc = g // n_procs
+    # One row per DEVICE (the graph axis shards by device): this process
+    # contributes its value on its first device's row, zeros elsewhere.
+    block = np.zeros((devs_per_proc,) + local.shape, dtype=local.dtype)
+    block[0] = local
+    sharding = NamedSharding(mesh, P("graph"))
+    arr = compat.array_from_process_local_data(sharding, block, (g,) + local.shape)
+    return host_read(arr).sum(axis=0)
+
+
+def addressable_row_block(global_shape, sharding) -> tuple[int, int]:
     """[lo, hi) leading-axis rows this process's devices own under
     ``sharding``. The graph layouts shard only the leading axis (or nothing),
     so the addressable region is one contiguous row block; asserted here

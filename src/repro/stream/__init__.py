@@ -13,7 +13,12 @@ PAPERS.md) without giving up the O(k)-plan, Thm.-2-minimal rescale property:
                     per-partition slack slots of the (optionally mesh-sharded)
                     engine pack, and a compact/gather program that rescales the
                     streaming pack k→k' without leaving the mesh.
+* ``spill``       — cold-region spill layer: bounded-resident host mirror
+                    (LRU-by-escalation region blocks to host/disk) and the
+                    lean content-addressed ingestor the out-of-core path
+                    streams through.
 """
 from .updates import EdgeUpdateBatch, SyntheticStream  # noqa: F401
 from .incremental import IncrementalOrderer, StreamConfig, best_insert_position  # noqa: F401
 from .ingest import StreamingEngine, IngestStats, StreamRescaleStats  # noqa: F401
+from .spill import SpillConfig, SpillStore, OutOfCoreIngestor  # noqa: F401

@@ -57,6 +57,7 @@ asserted per step with ``verify=True``).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Optional
 
@@ -78,6 +79,8 @@ from .incremental import IncrementalOrderer
 from .updates import EdgeUpdateBatch
 
 __all__ = ["IngestStats", "StreamRescaleStats", "StreamingEngine"]
+
+_LOG = logging.getLogger(__name__)
 
 _MIN_OP_CAPACITY = 32
 # Fixed op capacity of the commit splice: one warmed program signature serves
@@ -204,6 +207,7 @@ class StreamingEngine:
         self.rebuild_log: list = []  # committed/aborted rebuild records
         self.rebuild_state = ""  # ""/"dispatch"/"flight"/"commit"/"abort"
         self.last_rebuild_s = 0.0  # rebuild work inside the last monitor call
+        self._greedy_overflow_logged = False  # int32-fallback warning fires once
         # ONE kind-prefixed LRU for every program family (scatter / compact /
         # span_repair / full_reorder / splice), like ElasticRescaler's
         # migrate+counts cache. The default is sized for the families SHARING
@@ -737,17 +741,39 @@ class StreamingEngine:
         ks = FRK.eval_ks_full(o.config.k_min, o.config.k_max, o.regions)
         use_cand = True
         params = None
-        if self.full_rebuild == "geo":
+        mode_label = self.full_rebuild
+        rung_mode = self.full_rebuild
+        if rung_mode != "geo":
+            deg = np.bincount(np.concatenate([u[valid], v[valid]]), minlength=1)
+            if not FRK.greedy_fits_int32(
+                n_live, o.config.k_min, o.config.k_max, int(deg.max())
+            ):
+                # The on-mesh greedy's int32 priorities would overflow on
+                # this graph (out-of-core scales cross the bound routinely).
+                # Degrade to the host-order "apply" path instead of raising —
+                # a full rebuild must never abort the ingest loop.
+                if not self._greedy_overflow_logged:
+                    self._greedy_overflow_logged = True
+                    _LOG.warning(
+                        "full-rebuild greedy overflows int32 at |E|=%d, "
+                        "max_degree=%d: falling back to host geo_order "
+                        "(logged once per engine)",
+                        n_live,
+                        int(deg.max()),
+                    )
+                rung_mode = "geo"
+                mode = _FULL_PROGRAM_MODE["geo"]
+                mode_label = f"{self.full_rebuild}+host-fallback"
+        if rung_mode == "geo":
             # Oracle path: host geo_order IS the committed order; the device
             # program applies it verbatim (mode "apply").
             chosen = FRK.geo_full_candidate(u, v, valid, nv, o.config.k_min, o.config.k_max)
             cand = chosen
         else:
-            if self.full_rebuild == "device":
+            if rung_mode == "device":
                 cand = FRK.identity_candidate(valid)  # incumbent = never-worse floor
             else:  # differential: geo oracle as the scored candidate
                 cand = FRK.geo_full_candidate(u, v, valid, nv, o.config.k_min, o.config.k_max)
-            deg = np.bincount(np.concatenate([u[valid], v[valid]]), minlength=1)
             alpha, beta, delta = FRK.greedy_params(
                 n_live, o.config.k_min, o.config.k_max, int(deg.max())
             )
@@ -785,7 +811,7 @@ class StreamingEngine:
             ]
         cand_edges, cand_mask = program(*operands)  # async — never blocked here
         self._flight = {
-            "mode": self.full_rebuild,
+            "mode": mode_label,
             "countdown": self.rebuild_flight,
             "cand_dev": (cand_edges, cand_mask),
             "cand_src": cand_src,

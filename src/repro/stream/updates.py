@@ -20,12 +20,10 @@ import dataclasses
 
 import numpy as np
 
-from ..core.baselines import splitmix64
+from ..core.baselines import mix_hash
 from ..core.graph import Graph
 
 __all__ = ["EdgeUpdateBatch", "SyntheticStream", "canonical_edges"]
-
-_U64 = np.uint64
 
 
 def canonical_edges(edges: np.ndarray) -> np.ndarray:
@@ -132,14 +130,9 @@ class SyntheticStream:
 
     # ------------------------------------------------------------------ hash
     def _h(self, batch: int, pos: int, salt: int) -> int:
-        key = (
-            self.seed * 0x9E3779B97F4A7C15
-            + batch * 0x100000001B3
-            + pos * 1_000_003
-            + salt
-        ) & 0xFFFFFFFFFFFFFFFF
-        with np.errstate(over="ignore"):  # u64 wraparound is the point
-            return int(splitmix64(_U64(key)))
+        # One shared helper with data/shards.py's generator (same key layout,
+        # same draw for the same (seed, index) — property-tested).
+        return int(mix_hash(self.seed, batch, pos, salt))
 
     def _candidate_insert(self, batch: int, pos: int) -> tuple[int, int] | None:
         h = self._h(batch, pos, salt=1)

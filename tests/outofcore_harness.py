@@ -1,0 +1,289 @@
+"""Per-process worker for the out-of-core acceptance (tests/test_outofcore.py).
+
+``spawn_local_cluster`` runs this once per process. Each worker executes the
+out-of-core pipeline end to end WITHOUT ever materializing the full edge
+list in one array:
+
+* **generate** — the graph is an ``RmatShardPlan``: any process regenerates
+  any shard statelessly (data/shards.py), so there is no ingest shuffle;
+* **rank + count** (phase A) — the locality rank comes from a bounded
+  stride sample; each process bincounts the chunk-load histogram over ITS
+  shards only and merges by ``psum_host``;
+* **order + commit** (phase B) — chunk membership and per-chunk GEO order
+  are pure functions of (plan, rank, splits), so the partitions this
+  process's devices own are filled by regenerating + ordering one chunk at
+  a time (LRU of one ordered chunk) and committed shard-by-shard via
+  ``pack_slots_sharded_stream`` — CEP-chunk sizes per partition, so the
+  pack is rescalable;
+* **rescale** (phase C) — ElasticRescaler executes 8 → 12 → 8 on the
+  committed pack across the process boundary;
+* **stream** (phase D) — a bounded-memory ``OutOfCoreIngestor`` (spill
+  layer) ingests stateless ``stream_edges`` batches through the elastic
+  controller; spill counters ride on the IngestEvents.
+
+The worker writes only its local shard rows plus a stats JSON; the parent
+test reassembles the global buffers and byte-compares them against the
+in-core oracle composition it computes itself (hier_order_edges +
+pack_slots), then gates RF quality against the sequential geo_order oracle.
+Peak RSS is printed in the ``PEAK_RSS_MB:`` marker format benchmarks parse.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+from repro.launch import multihost as MH  # noqa: E402  (before jax device init)
+
+SPEC = MH.initialize_from_env()  # must run before the first jax computation
+
+import jax  # noqa: E402
+
+from benchmarks.common import emit_peak_rss, peak_rss_mb  # noqa: E402
+from repro.core import cep  # noqa: E402
+from repro.core import hier_order as HO  # noqa: E402
+from repro.data import shards as DS  # noqa: E402
+from repro.elastic import controller as ec  # noqa: E402
+from repro.elastic.rescale_exec import ElasticRescaler  # noqa: E402
+from repro.graphs import engine as GE  # noqa: E402
+from repro.launch import mesh as MM  # noqa: E402
+from repro.stream import EdgeUpdateBatch, OutOfCoreIngestor, SpillConfig  # noqa: E402
+
+def _env_int(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+# One config, shared with the parent's oracle (imported from here). The
+# REPRO_OC_* overrides exist for benchmarks/bench_outofcore.py, which reuses
+# this worker at 2^23+-edge scale; the test defaults stay pinned so the
+# parent oracle and the workers always agree.
+PLAN = DS.RmatShardPlan(
+    scale=_env_int("REPRO_OC_SCALE", 12),
+    edge_factor=_env_int("REPRO_OC_EF", 8),
+    seed=_env_int("REPRO_OC_SEED", 0),
+    num_shards=_env_int("REPRO_OC_SHARDS", 4),
+)
+CFG = HO.HierConfig(
+    num_chunks=_env_int("REPRO_OC_CHUNKS", 4),
+    # The working-set knob: chunk_splits adds chunks until none exceeds it.
+    # Each chunk materialization pays one full candidate rescan, so the bench
+    # raises it at 2^23+ scale (bigger but still bounded chunks) rather than
+    # paying O(candidates) per 2^17-edge sliver.
+    max_chunk_edges=_env_int("REPRO_OC_MAX_CHUNK", 1 << 17),
+    seam_window=0,
+    seed=0,
+)
+SAMPLE_STRIDE = _env_int("REPRO_OC_STRIDE", 2)
+SKIP_BLOCKS = bool(_env_int("REPRO_OC_SKIP_BLOCKS", 0))
+K_PACK = 8
+K_UP = 12
+STREAM_BATCHES = 6
+STREAM_BATCH_SIZE = 256
+SPILL_REGIONS = 64
+SPILL_SPR = 128
+SPILL_RESIDENT = 8
+
+
+def log(pid: int, msg: str) -> None:
+    print(f"[proc {pid}] {msg}", flush=True)
+
+
+def save_blocks(store: dict, name: str, arr) -> None:
+    for lo, hi, data in MH.local_shard_rows(arr):
+        store[f"{name}__{lo}__{hi}"] = data
+
+
+# --------------------------------------------------------- pure composition
+def build_rank_and_splits(mesh):
+    """Phase A: sample → rank (every process derives the identical rank from
+    the identical bounded sample), then the chunk-load histogram summed over
+    processes — each bincounts only its OWN shards."""
+    pid = jax.process_index()
+    n_procs = jax.process_count()
+    sample = DS.sample_edges(PLAN, SAMPLE_STRIDE)
+    rank = HO.locality_rank(sample, PLAN.num_vertices, CFG.seed, mode=CFG.rank_mode)
+    load_local = np.zeros(PLAN.num_vertices, dtype=np.int32)
+    for s in range(pid, PLAN.num_shards, n_procs):
+        load_local += HO.chunk_load(rank, DS.shard_edges(PLAN, s)).astype(np.int32)
+    load = MH.psum_host(load_local, mesh).astype(np.int64)
+    splits = HO.chunk_splits(load, CFG)
+    sizes = [int(load[int(splits[c]) : int(splits[c + 1])].sum())
+             for c in range(splits.shape[0] - 1)]
+    return rank, splits, sizes
+
+
+class ChunkMaterializer:
+    """Ordered chunk edges as a pure function of (plan, rank, splits, cfg):
+    regenerate every shard, keep only this chunk's edges (candidate order,
+    the same order the in-core oracle filters in), GEO-order the block.
+    Caches ONE chunk — the resident bound the pipeline promises."""
+
+    def __init__(self, rank, splits, sizes):
+        self.rank, self.splits, self.sizes = rank, splits, sizes
+        self.bounds = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+        self._cached = (-1, None)
+
+    def chunk(self, c: int) -> np.ndarray:
+        if self._cached[0] == c:
+            return self._cached[1]
+        blocks = []
+        for s in range(PLAN.num_shards):
+            es = DS.shard_edges(PLAN, s)
+            cid = HO.chunk_of_edges(self.splits, self.rank, es)
+            blocks.append(es[cid == c])
+        block = np.concatenate(blocks) if blocks else np.empty((0, 2), np.int64)
+        perm = HO.order_edge_block(block, CFG, seed=CFG.seed + c)
+        self._cached = (c, block[perm])
+        return self._cached[1]
+
+    def ordered_range(self, lo: int, hi: int) -> np.ndarray:
+        """Edges [lo, hi) of the global ordered sequence — touches only the
+        chunks overlapping the range."""
+        out = []
+        c = int(np.searchsorted(self.bounds, lo, side="right") - 1)
+        while lo < hi:
+            ce = self.chunk(c)
+            s = lo - int(self.bounds[c])
+            e = min(hi, int(self.bounds[c + 1])) - int(self.bounds[c])
+            out.append(ce[s:e])
+            lo += e - s
+            c += 1
+        return np.concatenate(out) if out else np.empty((0, 2), np.int64)
+
+
+def commit_pack(mat: ChunkMaterializer, mesh):
+    """Phase B commit: partition p holds CEP chunk p of the ordered sequence
+    (prefix-valid slots, so the pack is rescalable by range copies), staged
+    one partition at a time through pack_slots_sharded_stream."""
+    total = int(mat.bounds[-1])
+    cep_bounds = cep.chunk_bounds(total, K_PACK)
+    spr = int(np.diff(cep_bounds).max())
+
+    def part_fn(p):
+        lo, hi = int(cep_bounds[p]), int(cep_bounds[p + 1])
+        ed = mat.ordered_range(lo, hi)
+        src = np.zeros(spr, dtype=np.int64)
+        dst = np.zeros(spr, dtype=np.int64)
+        valid = np.zeros(spr, dtype=bool)
+        n = ed.shape[0]
+        src[:n], dst[:n], valid[:n] = ed[:, 0], ed[:, 1], True
+        return src, dst, valid
+
+    return GE.pack_slots_sharded_stream(part_fn, K_PACK, PLAN.num_vertices, mesh, spr)
+
+
+def run_rescale_phase(data, store: dict) -> dict:
+    pid = jax.process_index()
+    rescaler = ElasticRescaler()
+    n = data.num_edges
+    d_up, s_out = rescaler.execute(data, cep.scale_plan(n, K_PACK, K_UP), recheck=False)
+    log(pid, f"{K_PACK}->{K_UP} executed: cross_process_bytes={s_out.cross_process_bytes}")
+    if not SKIP_BLOCKS:
+        save_blocks(store, "rescale_up_edges", d_up.edges)
+        save_blocks(store, "rescale_up_mask", d_up.mask)
+    d_back, s_in = rescaler.execute(d_up, cep.scale_plan(n, K_UP, K_PACK), recheck=False)
+    log(pid, f"{K_UP}->{K_PACK} executed: cross_process_bytes={s_in.cross_process_bytes}")
+    if not SKIP_BLOCKS:
+        save_blocks(store, "rescale_back_edges", d_back.edges)
+        save_blocks(store, "rescale_back_mask", d_back.mask)
+    return {
+        "out": {"cross_process_bytes": s_out.cross_process_bytes,
+                "migrated_edges": s_out.migrated_edges},
+        "in": {"cross_process_bytes": s_in.cross_process_bytes,
+               "migrated_edges": s_in.migrated_edges},
+    }
+
+
+def run_stream_phase() -> dict:
+    """Phase D: bounded-memory ingest tail. Every process runs the identical
+    deterministic script — the parent asserts both landed the same state."""
+    ing = OutOfCoreIngestor(
+        PLAN.num_vertices, SPILL_REGIONS, SPILL_SPR,
+        config=SpillConfig(max_resident=SPILL_RESIDENT),
+    )
+    ctl = ec.ElasticController(jax.process_count())
+    ctl.attach_stream(ing)
+    inserted = skipped = 0
+    for b in range(STREAM_BATCHES):
+        ins = DS.stream_edges(PLAN, b, STREAM_BATCH_SIZE)
+        ev = ctl.ingest(EdgeUpdateBatch(insert=ins, delete=np.empty((0, 2), np.int64)))
+        inserted += ev.inserted
+        skipped += ev.skipped
+    last = ctl.events[-1]
+    return {
+        "num_edges": ing.num_edges,
+        "inserted": inserted,
+        "skipped": skipped,
+        "resident": ing.store.resident,
+        "spill": dict(last.spill),
+        "seqs": [e.seq for e in ctl.events],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args()
+    pid = jax.process_index()
+    log(pid, f"{jax.process_count()} processes, {len(jax.local_devices())} local / "
+             f"{len(jax.devices())} global devices")
+
+    mesh = MM.make_graph_mesh()
+    store: dict = {}
+    wall = {}
+
+    t0 = time.perf_counter()
+    rank, splits, sizes = build_rank_and_splits(mesh)
+    wall["rank"] = time.perf_counter() - t0
+    log(pid, f"phase A: {len(sizes)} chunks, sizes={sizes} "
+             f"(peak rss {peak_rss_mb(include_children=False):.0f} MB)")
+    mat = ChunkMaterializer(rank, splits, sizes)
+
+    t0 = time.perf_counter()
+    data = commit_pack(mat, mesh)
+    wall["commit"] = time.perf_counter() - t0
+    log(pid, f"phase B: committed k={data.k} |E|={data.num_edges} "
+             f"(peak rss {peak_rss_mb(include_children=False):.0f} MB)")
+    if not SKIP_BLOCKS:
+        save_blocks(store, "commit_edges", data.edges)
+        save_blocks(store, "commit_mask", data.mask)
+        save_blocks(store, "commit_degrees", data.degrees)
+
+    t0 = time.perf_counter()
+    rescale = run_rescale_phase(data, store)
+    wall["rescale"] = time.perf_counter() - t0
+    log(pid, f"phase C: rescaled (peak rss {peak_rss_mb(include_children=False):.0f} MB)")
+    t0 = time.perf_counter()
+    stream = run_stream_phase()
+    wall["stream"] = time.perf_counter() - t0
+
+    record = {
+        "process_id": pid,
+        "num_processes": jax.process_count(),
+        "devices": len(jax.devices()),
+        "splits": [int(x) for x in splits],
+        "chunk_sizes": [int(s) for s in sizes],
+        "num_edges": int(data.num_edges),
+        "rescale": rescale,
+        "stream": stream,
+        "wall": {k: round(v, 3) for k, v in wall.items()},
+    }
+
+    os.makedirs(args.out, exist_ok=True)
+    np.savez(os.path.join(args.out, f"proc{pid}.npz"), **store)
+    with open(os.path.join(args.out, f"proc{pid}.json"), "w") as fh:
+        json.dump(record, fh, indent=2)
+    emit_peak_rss()
+    log(pid, "DONE")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,8 @@ kernel's host/device bit identity, the double-buffered dispatch → flight →
 commit protocol through the StreamingEngine + ElasticController, the abort
 path, the anticipation/shadow extensions of the escalation ladder, and an
 interleaving property test mixing async rebuilds with ingest and rescales."""
+import logging
+
 import numpy as np
 import pytest
 from conftest import hypothesis_or_stub
@@ -116,6 +118,50 @@ def test_select_full_order_never_worse_than_incumbent(ordered):
 def test_greedy_params_rejects_int32_overflow():
     with pytest.raises(ValueError, match="overflow int32"):
         FRK.greedy_params(2**28, 2, 64, max_degree=1000)
+
+
+def test_greedy_fits_int32_boundary_exact():
+    """The predicate is pinned at exactly 2^31: with k_min=k_max=1 the bound
+    collapses to E·(max_degree+1), so E=2^21, d+1=2^10 lands exactly ON the
+    bound (reject) and E=2^21−1 lands one step under (fit) — and
+    ``greedy_params`` agrees with the predicate on both sides."""
+    assert not FRK.greedy_fits_int32(2**21, 1, 1, 2**10 - 1)
+    assert FRK.greedy_fits_int32(2**21 - 1, 1, 1, 2**10 - 1)
+    with pytest.raises(ValueError, match="overflow int32"):
+        FRK.greedy_params(2**21, 1, 1, 2**10 - 1)
+    alpha, beta, delta = FRK.greedy_params(2**21 - 1, 1, 1, 2**10 - 1)
+    assert (alpha, beta) == (2**21 - 1, 0)
+
+
+def test_device_rebuild_falls_back_to_host_on_int32_overflow(caplog):
+    """A hub graph past the int32 priority bound must not abort the device
+    full rung: the engine degrades to the host geo_order path (mode label
+    ``device+host-fallback``), warns exactly once per engine, and the device
+    pack stays bit-identical to the host mirror after the commit."""
+    E = 26_000  # star graph: max_degree == E pushes the bound past 2^31
+    src = np.zeros(E, dtype=np.int64)
+    dst = np.arange(1, E + 1, dtype=np.int64)
+    o = IncrementalOrderer(src, dst, E + 1, regions=4, config=StreamConfig(**QUIET))
+    assert not FRK.greedy_fits_int32(E, o.config.k_min, o.config.k_max, E)
+    eng = StreamingEngine(
+        o, MM.make_graph_mesh(1), full_rebuild="device", rebuild_flight=0
+    )
+    with caplog.at_level(logging.WARNING, logger="repro.stream.ingest"):
+        o.drift = lambda: 99.0
+        assert eng.monitor() == "full"
+        (rec,) = eng.drain_rebuild_events()
+        assert rec["committed"] and not rec["aborted"]
+        assert rec["mode"] == "device+host-fallback"
+        eng.verify_bit_identity()
+        assert eng.monitor() == "full"  # a second rebuild must not re-warn
+        del o.drift
+    (rec2,) = eng.drain_rebuild_events()
+    assert rec2["mode"] == "device+host-fallback"
+    eng.verify_bit_identity()
+    warnings = [
+        r for r in caplog.records if "falling back to host geo_order" in r.message
+    ]
+    assert len(warnings) == 1
 
 
 # High thresholds so ONLY the mocked drift escalates — the forced-cycle tests
