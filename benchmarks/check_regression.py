@@ -11,6 +11,12 @@ instead of silently shipping a worse baseline:
 * ``quality.worst_ratio`` ≤ 1.10 — incremental order quality stays within
   the RF acceptance margin of the from-scratch GEO oracle at every
   checkpoint.
+* ``observability.overhead_within_2pct`` must be true — span tracing inside
+  the monitored stream costs < 2% of the amortized batch wall.
+
+A ``trace.json`` argument is gated on Chrome-trace WELL-FORMEDNESS instead
+(``repro.obs.trace_export.validate_chrome_trace`` over the multidevice
+smoke's freshly exported span timeline).
 
 Exit code 0 = all gates hold; 1 = a gate failed or the artifact is missing
 a gated field (a silently dropped gate is a failure, not a pass).
@@ -51,7 +57,24 @@ def check_stream(record: dict) -> list[str]:
         failures.append("quality.worst_ratio: missing")
     elif float(worst) > 1.10:
         failures.append(f"quality.worst_ratio {worst} > 1.10")
+    within2 = _get(record, "observability.overhead_within_2pct")
+    if within2 is None:
+        failures.append("observability.overhead_within_2pct: missing")
+    elif within2 is not True:
+        failures.append(
+            "observability.overhead_within_2pct is false (tracing cost "
+            f"{_get(record, 'observability.overhead_frac_of_batch_wall')} "
+            "of the amortized batch wall)"
+        )
     return failures
+
+
+def check_trace(record: dict) -> list[str]:
+    """Well-formedness gate for an exported Chrome-trace JSON (the CI
+    multidevice smoke's trace.json artifact)."""
+    from repro.obs.trace_export import validate_chrome_trace
+
+    return validate_chrome_trace(record)
 
 
 def check_outofcore(record: dict) -> list[str]:
@@ -75,6 +98,7 @@ def check_outofcore(record: dict) -> list[str]:
 CHECKERS = {
     "BENCH_stream.json": check_stream,
     "BENCH_outofcore.json": check_outofcore,
+    "trace.json": check_trace,
 }
 
 

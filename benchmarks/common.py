@@ -52,11 +52,15 @@ def emit_peak_rss() -> None:
 
 
 def parse_peak_rss(text: str):
-    """Largest ``PEAK_RSS_MB:`` marker in a child log, or None."""
+    """Largest ``PEAK_RSS_MB:`` marker in a child log, or None. The marker is
+    searched WITHIN each line, not at line start: ``spawn_local_cluster``
+    prefixes captured lines with the child's process index (``[p0] ``).
+    New code should prefer ``repro.obs.metrics.record_peak_rss`` (per-process
+    gauges through the metrics registry) over stdout-marker parsing."""
     best = None
     for line in str(text).splitlines():
-        line = line.strip()
-        if line.startswith(RSS_MARK):
-            val = float(line[len(RSS_MARK):])
+        idx = line.find(RSS_MARK)
+        if idx >= 0:
+            val = float(line[idx + len(RSS_MARK):].strip())
             best = val if best is None else max(best, val)
     return best

@@ -177,6 +177,34 @@ print(f"proc {jax.process_index()}/{jax.process_count()}: 4->6 moved "
           f"{cfg.num_chunks} chunks (workers hold 1 ordered chunk at a time), "
           f"RF@16 {rf_h:.3f} vs in-core GEO {rf_o:.3f} ({rf_h/rf_o:.3f}x)")
 
+    # 10. OBSERVE the runtime: hand the engine a span tracer + metrics
+    #     registry (both default OFF — a disabled tracer costs one branch per
+    #     would-be span), run a stream, and dump a Chrome trace you can open
+    #     in chrome://tracing or ui.perfetto.dev — one swimlane per phase
+    #     (ingest / rung / rebuild / rescale / transfer), plus exact latency
+    #     percentiles from the registry's histograms (DESIGN.md §13;
+    #     benchmarks/bench_stream.py --trace does this for the full scenario,
+    #     and on a multi-process mesh registry.snapshot_global(mesh) sums the
+    #     metrics across every process with one collective).
+    from repro.obs import MetricsRegistry, Tracer, chrome_trace, write_chrome_trace
+
+    tracer = Tracer()
+    registry = MetricsRegistry()
+    orderer3 = IncrementalOrderer(src, dst, g.num_vertices, regions=8)
+    engine3 = StreamingEngine(orderer3, MM.make_graph_mesh(1),
+                              tracer=tracer, metrics_registry=registry)
+    stream3 = SyntheticStream(g, batch_size=256, seed=3)
+    for _ in range(4):
+        engine3.ingest(stream3.batch())
+        engine3.monitor()
+    engine3.rescale(12)
+    write_chrome_trace("/tmp/quickstart_trace.json", chrome_trace(tracer))
+    pct = registry.percentiles("stream.ingest.batch_s")
+    print(f"observability: {len(tracer)} spans -> /tmp/quickstart_trace.json "
+          f"(open in ui.perfetto.dev); ingest p50 {pct['p50']*1e3:.1f}ms "
+          f"p99 {pct['p99']*1e3:.1f}ms, "
+          f"{int(registry.counter('stream.scatter_ops').value)} scatter ops")
+
 
 if __name__ == "__main__":
     main()

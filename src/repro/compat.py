@@ -38,6 +38,7 @@ __all__ = [
     "process_index",
     "process_count",
     "array_from_process_local_data",
+    "profiler_annotation",
 ]
 
 
@@ -147,6 +148,22 @@ def array_from_process_local_data(sharding, local_data, global_shape):
         return jax.make_array_from_process_local_data(
             sharding, local_data, global_shape=global_shape
         )
+
+
+def profiler_annotation(name: str):
+    """A ``jax.profiler`` trace annotation context for ``name`` — makes host
+    spans (obs/trace.py) visible inside a jax profiler capture so device
+    program time can be correlated with them. The annotation class has been
+    spelled both ``TraceAnnotation`` and ``TraceContext`` across releases;
+    a null context when the installed jax has neither (annotation is an
+    optional correlation aid, never load-bearing)."""
+    prof = getattr(jax, "profiler", None)
+    cls = getattr(prof, "TraceAnnotation", None) or getattr(prof, "TraceContext", None)
+    if cls is None:
+        import contextlib
+
+        return contextlib.nullcontext()
+    return cls(name)
 
 
 def donate_jit(fn=None, *, donate_argnums=(), **jit_kwargs):

@@ -29,6 +29,8 @@ import time
 from typing import Callable, Optional
 
 from ..core import cep
+from ..obs import metrics as OM
+from ..obs import trace as OT
 
 
 @dataclasses.dataclass
@@ -124,6 +126,8 @@ class ElasticController:
         state_elements: int = 1_000_000,
         clock: Callable[[], float] = time.monotonic,
         rescaler=None,
+        tracer=None,
+        metrics_registry=None,
     ):
         self.clock = clock
         self.dead_after_s = dead_after_s
@@ -137,6 +141,42 @@ class ElasticController:
         self.engine_data = None  # packed EngineData migrated on scale events
         self.stream = None  # StreamingEngine: scale events + ingest run on it
         self.rescale_stats: list = []
+        # Observability (obs/, DESIGN.md §13): the event wall histogram and
+        # the queue-depth / events-per-second gauges are the signals the
+        # ROADMAP's traffic-driven autoscaler will consume.
+        self._tracer = tracer
+        self.metrics = OM.NULL if metrics_registry is None else metrics_registry
+        self._m_wall = self.metrics.histogram("controller.batch_wall_s")
+        self._m_queue = self.metrics.gauge("controller.queue_depth")
+        self._m_rate = self.metrics.gauge("controller.events_per_s")
+        self._m_ingests = self.metrics.counter("controller.ingest_events")
+        self._m_scales = self.metrics.counter("controller.scale_events")
+        self._last_event_t: Optional[float] = None
+
+    @property
+    def tracer(self):
+        return self._tracer if self._tracer is not None else OT.get_tracer()
+
+    def _mark_event(self) -> None:
+        """Update the events/s gauge: an EMA of the inter-event rate (the
+        smoothing keeps a bursty stream from whipsawing the autoscaler
+        signal; 0 until two events exist)."""
+        now = time.perf_counter()
+        if self._last_event_t is not None:
+            dt = now - self._last_event_t
+            if dt > 0:
+                prev = self._m_rate.value
+                rate = 1.0 / dt
+                self._m_rate.set(rate if prev == 0.0 else 0.8 * prev + 0.2 * rate)
+        self._last_event_t = now
+
+    def events_jsonl(self, *, drop_timings: bool = False) -> str:
+        """The full event log (shared ``seq`` order) as JSONL — see
+        obs/log.py; ``drop_timings`` zeroes wall-clock fields so logs from
+        deterministic replica processes diff byte-identical."""
+        from ..obs import log as OL
+
+        return OL.events_jsonl(self.events, drop_timings=drop_timings)
 
     def _next_seq(self) -> int:
         s = self._seq
@@ -263,6 +303,10 @@ class ElasticController:
         escalation = self.stream.monitor()
         monitor_s = time.perf_counter() - t0
         self._drain_rebuilds()
+        self._m_wall.observe(stats.elapsed_s + monitor_s)
+        self._m_queue.set(int(getattr(self.stream, "rebuilds_in_flight", 0)))
+        self._m_ingests.inc()
+        self._mark_event()
         # Per-rung ladder accounting (StreamingEngine keeps the counters; a
         # host-only replay stream may not — default to empty).
         counts = getattr(self.stream, "rung_counts", {})
@@ -336,6 +380,8 @@ class ElasticController:
         # A rescale aborts any in-flight rebuild: sequence the abort record
         # BEFORE the scale event that caused it.
         self._drain_rebuilds()
+        self._m_scales.inc()
+        self._mark_event()
         ev = ScaleEvent(
             kind, k_old, k_new, lost, frac, reason, executed, cross_device_bytes,
             cross_process_bytes, seq=self._next_seq(),

@@ -51,6 +51,8 @@ from ..compat import donate_jit
 from ..core import cep, metrics
 from ..graphs import engine as graph_engine
 from ..launch import sharding as SH
+from ..obs import metrics as OM
+from ..obs import trace as OT
 
 __all__ = [
     "EDGE_BYTES",
@@ -89,6 +91,7 @@ class ProgramCache:
         self._programs: collections.OrderedDict = collections.OrderedDict()
         # kind (key[0] for tuple keys, "?" otherwise) → {hits, misses, evictions}
         self.counters: dict = {}
+        self._counters_shared = False  # a snapshot aliases self.counters
 
     def __len__(self) -> int:
         return len(self._programs)
@@ -104,14 +107,25 @@ class ProgramCache:
         return str(key[0]) if isinstance(key, tuple) and key else "?"
 
     def _count(self, key, event: str) -> None:
+        if self._counters_shared:
+            # Copy-on-WRITE: a snapshot handed out earlier aliases the live
+            # dicts — clone before mutating so every outstanding snapshot
+            # stays frozen at its emit-time values.
+            self.counters = {kind: dict(c) for kind, c in self.counters.items()}
+            self._counters_shared = False
         c = self.counters.setdefault(
             self._kind(key), {"hits": 0, "misses": 0, "evictions": 0}
         )
         c[event] += 1
 
     def counters_snapshot(self) -> dict:
-        """Deep copy of the per-kind counters (safe to attach to events)."""
-        return {kind: dict(c) for kind, c in self.counters.items()}
+        """Per-kind counters, isolated from later cache activity — safe to
+        attach to events. Lazily: the LIVE mapping is returned and the cache
+        clones it before its next mutation (copy-on-write), so the per-event
+        hot path (every IngestEvent snapshots) costs a flag set, not a deep
+        copy per batch. Callers must treat the result as immutable."""
+        self._counters_shared = True
+        return self.counters
 
     def get(self, key):
         cached = self._programs.get(key)
@@ -217,9 +231,24 @@ class ElasticRescaler:
     self-consistent.
     """
 
-    def __init__(self, *, donate: bool = True, program_cache_size: int = 8):
+    def __init__(
+        self,
+        *,
+        donate: bool = True,
+        program_cache_size: int = 8,
+        tracer=None,
+        metrics_registry=None,
+    ):
         self.donate = donate
         self._programs = ProgramCache(program_cache_size)
+        # Observability (obs/): tracer=None falls back to the process-global
+        # tracer (disabled by default); metrics default to the inert registry.
+        self._tracer = tracer
+        self.metrics = OM.NULL if metrics_registry is None else metrics_registry
+
+    @property
+    def tracer(self):
+        return self._tracer if self._tracer is not None else OT.get_tracer()
 
     @property
     def program_cache_size(self) -> int:
@@ -306,9 +335,15 @@ class ElasticRescaler:
 
         program, stats_base = self._program(n, k_old, k_new, plan, mesh)
         t0 = time.perf_counter()
-        new_edges, new_mask = program(data.edges)
-        jax.block_until_ready(new_edges)
+        with self.tracer.span("rescale.migrate"):
+            new_edges, new_mask = program(data.edges)
+            jax.block_until_ready(new_edges)
         elapsed = time.perf_counter() - t0
+        m = self.metrics
+        m.histogram("rescale.migrate_s").observe(elapsed)
+        m.counter("rescale.migrated_bytes").inc(stats_base.migrated_bytes)
+        m.counter("rescale.cross_device_bytes").inc(stats_base.cross_device_bytes)
+        m.counter("rescale.cross_process_bytes").inc(stats_base.cross_process_bytes)
 
         # Metrics re-check: recompute quality numbers for the new k (never
         # carried over from the old pack).

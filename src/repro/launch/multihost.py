@@ -49,6 +49,7 @@ import time
 import numpy as np
 
 from .. import compat
+from ..obs import trace as OT
 from . import sharding as SH
 
 __all__ = [
@@ -141,13 +142,14 @@ def put_global(host_arr, sharding):
     helper available (plain single-process jax)."""
     import jax
 
-    host_arr = np.asarray(host_arr)
-    if compat.process_count() == 1:
-        return jax.device_put(host_arr, sharding)
-    lo, hi = addressable_row_block(host_arr.shape, sharding)
-    return compat.array_from_process_local_data(
-        sharding, host_arr[lo:hi], host_arr.shape
-    )
+    with OT.span("transfer.put_global"):
+        host_arr = np.asarray(host_arr)
+        if compat.process_count() == 1:
+            return jax.device_put(host_arr, sharding)
+        lo, hi = addressable_row_block(host_arr.shape, sharding)
+        return compat.array_from_process_local_data(
+            sharding, host_arr[lo:hi], host_arr.shape
+        )
 
 
 def put_global_local(local_block, global_shape, sharding):
@@ -161,16 +163,17 @@ def put_global_local(local_block, global_shape, sharding):
     device_put path (the local block IS the array)."""
     import jax
 
-    local_block = np.asarray(local_block)
-    lo, hi = addressable_row_block(global_shape, sharding)
-    if local_block.shape[0] != hi - lo or local_block.shape[1:] != tuple(global_shape[1:]):
-        raise ValueError(
-            f"local block shape {local_block.shape} does not cover rows "
-            f"[{lo}, {hi}) of global shape {tuple(global_shape)}"
-        )
-    if compat.process_count() == 1:
-        return jax.device_put(local_block, sharding)
-    return compat.array_from_process_local_data(sharding, local_block, tuple(global_shape))
+    with OT.span("transfer.put_global"):
+        local_block = np.asarray(local_block)
+        lo, hi = addressable_row_block(global_shape, sharding)
+        if local_block.shape[0] != hi - lo or local_block.shape[1:] != tuple(global_shape[1:]):
+            raise ValueError(
+                f"local block shape {local_block.shape} does not cover rows "
+                f"[{lo}, {hi}) of global shape {tuple(global_shape)}"
+            )
+        if compat.process_count() == 1:
+            return jax.device_put(local_block, sharding)
+        return compat.array_from_process_local_data(sharding, local_block, tuple(global_shape))
 
 
 def psum_host(local, mesh) -> np.ndarray:
@@ -181,22 +184,23 @@ def psum_host(local, mesh) -> np.ndarray:
     from its own shards: the local value is staged as this process's row of
     a (num_processes, …) device array sharded over ``graph`` and summed
     after one all-gather. Single-process meshes return the input unchanged."""
-    local = np.asarray(local)
-    n_procs = compat.process_count()
-    if n_procs == 1:
-        return local.copy()
-    import jax
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    with OT.span("transfer.psum_host"):
+        local = np.asarray(local)
+        n_procs = compat.process_count()
+        if n_procs == 1:
+            return local.copy()
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
 
-    g = SH.graph_axis_size(mesh)
-    devs_per_proc = g // n_procs
-    # One row per DEVICE (the graph axis shards by device): this process
-    # contributes its value on its first device's row, zeros elsewhere.
-    block = np.zeros((devs_per_proc,) + local.shape, dtype=local.dtype)
-    block[0] = local
-    sharding = NamedSharding(mesh, P("graph"))
-    arr = compat.array_from_process_local_data(sharding, block, (g,) + local.shape)
-    return host_read(arr).sum(axis=0)
+        g = SH.graph_axis_size(mesh)
+        devs_per_proc = g // n_procs
+        # One row per DEVICE (the graph axis shards by device): this process
+        # contributes its value on its first device's row, zeros elsewhere.
+        block = np.zeros((devs_per_proc,) + local.shape, dtype=local.dtype)
+        block[0] = local
+        sharding = NamedSharding(mesh, P("graph"))
+        arr = compat.array_from_process_local_data(sharding, block, (g,) + local.shape)
+        return host_read(arr).sum(axis=0)
 
 
 def addressable_row_block(global_shape, sharding) -> tuple[int, int]:
@@ -240,9 +244,10 @@ def host_read(arr) -> np.ndarray:
 
     if not isinstance(arr, jax.Array) or arr.is_fully_addressable:
         return np.asarray(arr)
-    out = _replicate_fn(arr.sharding.mesh)(arr)
-    jax.block_until_ready(out)
-    return np.asarray(out)
+    with OT.span("transfer.host_read"):
+        out = _replicate_fn(arr.sharding.mesh)(arr)
+        jax.block_until_ready(out)
+        return np.asarray(out)
 
 
 def local_shard_rows(arr) -> list[tuple[int, int, np.ndarray]]:
@@ -313,7 +318,10 @@ def spawn_local_cluster(
     ``initialize_from_env()`` and sees an ``n_procs · devs_per_proc``-device
     global platform. Blocks until every process exits (or kills the whole
     group on timeout) and returns all logs; the caller decides what a failure
-    means (tests print ``format_logs()``)."""
+    means (tests print ``format_logs()``). Every captured log line is
+    prefixed ``[p{pid}] `` at emit time, so interleaved cluster output stays
+    attributable; marker scanners must search within lines, not at line
+    starts (benchmarks.common.parse_peak_rss does)."""
     if n_procs < 1:
         raise ValueError("n_procs must be >= 1")
     coord = f"127.0.0.1:{free_port()}"
@@ -337,39 +345,49 @@ def spawn_local_cluster(
                 cwd=cwd,
             )
         )
-    # Drain every child's pipes CONCURRENTLY: the processes form one
-    # collective group, so a single child blocked writing to a full pipe
-    # (verbose backend logging, a long traceback) would stall every other
-    # child at its next collective — sequential communicate() would then sit
-    # out the whole timeout instead of surfacing the real error.
-    outputs: dict[int, tuple] = {}
+    # Drain every child's pipes CONCURRENTLY and LINE-WISE: the processes
+    # form one collective group, so a single child blocked writing to a full
+    # pipe (verbose backend logging, a long traceback) would stall every
+    # other child at its next collective. Reading line-by-line (one thread
+    # per pipe) lets each line be tagged with its process index AT EMIT TIME
+    # — so interleaved multi-process logs stay attributable even when a test
+    # prints them mid-run, instead of only in the per-process failure dump.
+    captured: dict[tuple, list] = {(pid, s): [] for pid in range(n_procs) for s in (0, 1)}
 
-    def drain(pid: int, p) -> None:
-        try:
-            outputs[pid] = p.communicate(timeout=timeout)
-        except subprocess.TimeoutExpired:
-            p.kill()
-            out, err = p.communicate()
-            outputs[pid] = (
-                out,
-                (err or "") + f"\n[spawn_local_cluster] killed after {timeout}s timeout",
-            )
+    def drain(pid: int, stream, which: int) -> None:
+        prefix = f"[p{pid}] "
+        sink = captured[(pid, which)]
+        for line in iter(stream.readline, ""):
+            sink.append(prefix + line)
+        stream.close()
+
     threads = [
-        threading.Thread(target=drain, args=(pid, p), daemon=True)
+        threading.Thread(target=drain, args=(pid, s, which), daemon=True)
         for pid, p in enumerate(procs)
+        for which, s in ((0, p.stdout), (1, p.stderr))
     ]
-    results = []
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + timeout
+    timed_out = []
     try:
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join(timeout + 30.0)
+        for pid, p in enumerate(procs):
+            try:
+                p.wait(timeout=max(0.0, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                p.kill()
+                timed_out.append(pid)
     finally:
         for q in procs:
             if q.poll() is None:
                 q.kill()
+    for t in threads:  # readers end at EOF once every child has exited
+        t.join(30.0)
+    results = []
     for pid, p in enumerate(procs):
-        out, err = outputs.get(pid, ("", "[spawn_local_cluster] no output collected"))
+        err = "".join(captured[(pid, 1)])
+        if pid in timed_out:
+            err += f"\n[p{pid}] [spawn_local_cluster] killed after {timeout}s timeout"
         rc = p.returncode if p.returncode is not None else -1
-        results.append(ProcResult(pid, rc, out or "", err or ""))
+        results.append(ProcResult(pid, rc, "".join(captured[(pid, 0)]), err))
     return LocalClusterResult(coord, tuple(results))

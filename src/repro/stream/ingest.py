@@ -75,6 +75,8 @@ from ..graphs import engine as graph_engine
 from ..kernels import full_reorder as FRK
 from ..kernels import span_reorder as SRK
 from ..launch import sharding as SH
+from ..obs import metrics as OM
+from ..obs import trace as OT
 from .incremental import IncrementalOrderer
 from .updates import EdgeUpdateBatch
 
@@ -157,6 +159,8 @@ class StreamingEngine:
         full_rebuild: str = "host",
         rebuild_flight: int = 2,
         warm_scatter_caps: tuple = (),
+        tracer=None,
+        metrics_registry=None,
     ):
         if mesh is None:
             from ..launch import mesh as MM
@@ -228,6 +232,22 @@ class StreamingEngine:
         self._seen_scatter_caps = {
             int(_next_pow2(int(c))) for c in warm_scatter_caps
         }
+        # Observability (obs/, DESIGN.md §13). tracer=None falls back to the
+        # process-global tracer (disabled by default: spans cost one branch);
+        # metric objects are bound once here so the per-batch hot path does
+        # no registry lookups — against the default NULL registry every bound
+        # object is the shared inert metric.
+        self._tracer = tracer
+        self.metrics = OM.NULL if metrics_registry is None else metrics_registry
+        m = self.metrics
+        self._m_ingest_s = m.histogram("stream.ingest.batch_s")
+        self._m_monitor_s = m.histogram("stream.monitor.s")
+        self._m_rung_s = {r: m.histogram(f"stream.rung.{r}_s") for r in ("none", "partial", "full")}
+        self._m_updates = {k: m.counter(f"stream.updates.{k}") for k in ("inserted", "deleted", "skipped")}
+        self._m_scatter_ops = m.counter("stream.scatter_ops")
+        self._m_resyncs = m.counter("stream.resyncs")
+        self._m_edges = m.gauge("stream.num_edges")
+        self._m_in_flight = m.gauge("stream.rebuilds_in_flight")
         self.data = self._upload()
         orderer.needs_resync = False
         self._warm_span_program()
@@ -235,6 +255,10 @@ class StreamingEngine:
         self._warm_scatter_programs()
 
     # ------------------------------------------------------------- plumbing
+    @property
+    def tracer(self):
+        return self._tracer if self._tracer is not None else OT.get_tracer()
+
     @property
     def k(self) -> int:
         return self.orderer.regions
@@ -284,8 +308,10 @@ class StreamingEngine:
         in-flight rebuild: its snapshot geometry no longer exists."""
         if self._flight is not None:
             self._abort_rebuild("resync")
-        self.orderer.drain_ops()  # ops predate the re-layout; drop them
-        self.data = self._upload()
+        with self.tracer.span("ingest.resync"):
+            self.orderer.drain_ops()  # ops predate the re-layout; drop them
+            self.data = self._upload()
+        self._m_resyncs.inc()
         self.orderer.needs_resync = False
         self._warm_span_program()  # layout signature may have changed
         self._warm_full_program()
@@ -431,19 +457,26 @@ class StreamingEngine:
         """Apply one update batch: host slot placement, then the device
         scatter (or a resync when the batch forced a re-layout)."""
         t0 = time.perf_counter()
-        counts = self.orderer.apply(batch)
-        resynced = False
-        n_ops = 0
-        if self.orderer.needs_resync:
-            self._resync()
-            resynced = True
-        else:
-            ops, deg = self.orderer.drain_ops()
-            n_ops = len(ops)
-            if n_ops or deg:
-                self._scatter(ops, deg)
-        jax.block_until_ready(self.data.edges)
+        with self.tracer.span("ingest.batch"):
+            with self.tracer.span("ingest.apply"):
+                counts = self.orderer.apply(batch)
+            resynced = False
+            n_ops = 0
+            if self.orderer.needs_resync:
+                self._resync()
+                resynced = True
+            else:
+                ops, deg = self.orderer.drain_ops()
+                n_ops = len(ops)
+                if n_ops or deg:
+                    self._scatter(ops, deg)
+            jax.block_until_ready(self.data.edges)
         elapsed = time.perf_counter() - t0
+        self._m_ingest_s.observe(elapsed)
+        self._m_updates["inserted"].inc(counts["inserted"])
+        self._m_updates["deleted"].inc(counts["deleted"])
+        self._m_updates["skipped"].inc(counts["skipped"])
+        self._m_edges.set(self.orderer.num_edges)
         if verify:
             self.verify_bit_identity()
         return IngestStats(
@@ -457,6 +490,11 @@ class StreamingEngine:
         )
 
     def _scatter(self, ops, deg: dict) -> None:
+        with self.tracer.span("ingest.scatter"):
+            self._scatter_inner(ops, deg)
+        self._m_scatter_ops.inc(len(ops))
+
+    def _scatter_inner(self, ops, deg: dict) -> None:
         o = self.orderer
         g = SH.graph_axis_size(self.mesh)
         k_pad = self.data.k_pad
@@ -579,12 +617,13 @@ class StreamingEngine:
         program = self._compact_program(
             (int(old_edges.shape[0]), e_cap_old, k_pad_new, e_cap_new, self.mesh)
         )
-        edges, mask = program(
-            old_edges,
-            self._host_operand(src_row),
-            self._host_operand(src_col),
-            self._host_operand(validf),
-        )
+        with self.tracer.span("rescale.compact"):
+            edges, mask = program(
+                old_edges,
+                self._host_operand(src_row),
+                self._host_operand(src_col),
+                self._host_operand(validf),
+            )
         self.data = graph_engine.ShardedEngineData(
             edges=edges,
             mask=mask,
@@ -605,6 +644,10 @@ class StreamingEngine:
         self._warm_scatter_programs()
         jax.block_until_ready(self.data.edges)
         elapsed = time.perf_counter() - t0
+        m = self.metrics
+        m.histogram("stream.rescale.s").observe(elapsed)
+        m.counter("stream.rescale.cross_device_bytes").inc(cross * EDGE_BYTES)
+        m.counter("stream.rescale.cross_process_bytes").inc(xproc * EDGE_BYTES)
         if verify:
             self.verify_bit_identity()
         return StreamRescaleStats(
@@ -657,6 +700,17 @@ class StreamingEngine:
         and timings accumulate in ``rung_counts`` / ``rung_s`` (dispatch and
         commit both land in 'full'). Returns 'none' | 'partial' | 'full'."""
         t0 = time.perf_counter()
+        with self.tracer.span("rung.monitor"):
+            rung = self._monitor_inner()
+        elapsed = time.perf_counter() - t0
+        self.rung_counts[rung] += 1
+        self.rung_s[rung] += elapsed
+        self._m_monitor_s.observe(elapsed)
+        self._m_rung_s[rung].observe(elapsed)
+        self._m_in_flight.set(self.rebuilds_in_flight)
+        return rung
+
+    def _monitor_inner(self) -> str:
         self.rebuild_state = ""
         self.last_rebuild_s = 0.0
         # Flush anything the host applied since the last sync FIRST: the span
@@ -702,8 +756,6 @@ class StreamingEngine:
                 # rebuild_flight == 0: dispatch and commit inside one monitor
                 # call — synchronous semantics, the oracle-equivalence mode.
                 self._commit_rebuild()
-        self.rung_counts[rung] += 1
-        self.rung_s[rung] += time.perf_counter() - t0
         return rung
 
     def _full_rung(self) -> None:
@@ -711,8 +763,9 @@ class StreamingEngine:
         (host ``geo_order`` + full re-upload); the async modes dispatch the
         on-mesh rebuild and return without blocking."""
         if self.full_rebuild == "host":
-            self.orderer.full_rebuild()
-            self._resync()
+            with self.tracer.span("rebuild.sync"):
+                self.orderer.full_rebuild()
+                self._resync()
             self.last_repair = "resync"
         else:
             self._dispatch_rebuild()
@@ -729,6 +782,11 @@ class StreamingEngine:
         output arrays are the shadow pack the commit splices the flight's
         delta onto, while ingest keeps scattering into the live ones. Nothing
         here blocks on the device."""
+        with self.tracer.span("rebuild.dispatch"):
+            self._dispatch_rebuild_inner()
+        self.last_rebuild_s = self._flight["dispatch_s"]
+
+    def _dispatch_rebuild_inner(self) -> None:
         t0 = time.perf_counter()
         o = self.orderer
         u = o.slot_src.copy()
@@ -819,7 +877,6 @@ class StreamingEngine:
             "snapshot_edges": n_live,
             "dispatch_s": time.perf_counter() - t0,
         }
-        self.last_rebuild_s = self._flight["dispatch_s"]
 
     def _commit_rebuild(self) -> None:
         """Commit the in-flight rebuild: re-layout the host slot array to the
@@ -828,6 +885,10 @@ class StreamingEngine:
         onto the shadow buffers — the swap that makes them the live pack.
         Blocks, so the full rung's reported cost is honest. Falls back to a
         resync when the commit could not keep the buffer shape."""
+        with self.tracer.span("rebuild.commit"):
+            self._commit_rebuild_inner()
+
+    def _commit_rebuild_inner(self) -> None:
         t0 = time.perf_counter()
         fl, self._flight = self._flight, None
         o = self.orderer
@@ -1036,6 +1097,10 @@ class StreamingEngine:
         (slot array, drift counters) always advances through the orderer —
         via the byte-exact numpy mirror for the device modes — so the monitor
         needs no device readback."""
+        with self.tracer.span("rung.partial"):
+            self._partial_rung_inner()
+
+    def _partial_rung_inner(self) -> None:
         o = self.orderer
         if self.span_repair == "host":
             o.partial_reorder()  # slot ops picked up by _sync_pending below

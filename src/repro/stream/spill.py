@@ -36,6 +36,7 @@ from typing import Optional
 import numpy as np
 
 from ..core.baselines import splitmix64
+from ..obs import metrics as OM
 
 __all__ = ["SpillConfig", "SpillStore", "OutOfCoreIngestor", "LeanIngestStats"]
 
@@ -63,7 +64,14 @@ class SpillStore:
     serializes the least-recently-escalated blocks out until the resident
     count is within budget."""
 
-    def __init__(self, regions: int, slots_per_region: int, config: SpillConfig):
+    def __init__(
+        self,
+        regions: int,
+        slots_per_region: int,
+        config: SpillConfig,
+        *,
+        metrics_registry=None,
+    ):
         if regions < 1:
             raise ValueError("regions must be >= 1")
         if slots_per_region < 1:
@@ -71,6 +79,13 @@ class SpillStore:
         self.regions = int(regions)
         self.spr = int(slots_per_region)
         self.config = config
+        # Observability: spill/fault traffic histograms (block sizes) on top
+        # of the exact counters below; the registry's snapshot aggregates
+        # them across processes (obs/metrics.py). Defaults to the inert
+        # registry — zero cost when unused.
+        self.metrics = OM.NULL if metrics_registry is None else metrics_registry
+        self._m_spill_bytes = self.metrics.histogram("spill.spill_block_bytes", OM.BYTE_BUCKETS)
+        self._m_fault_bytes = self.metrics.histogram("spill.fault_block_bytes", OM.BYTE_BUCKETS)
         self._hot: dict[int, tuple] = {}  # region → (src, dst, valid)
         self._cold: dict[int, bytes] = {}  # region → serialized block
         self._clock = 0
@@ -127,6 +142,7 @@ class SpillStore:
                 block = (z["src"].copy(), z["dst"].copy(), z["valid"].copy())
             self.counters["faults"] += 1
             self.counters["bytes_faulted"] += len(blob)
+            self._m_fault_bytes.observe(len(blob))
         else:
             block = (
                 np.zeros(self.spr, dtype=np.int64),
@@ -156,6 +172,7 @@ class SpillStore:
             self._write_cold(victim, blob)
             self.counters["spills"] += 1
             self.counters["bytes_spilled"] += len(blob)
+            self._m_spill_bytes.observe(len(blob))
             spilled += 1
         return spilled
 
@@ -191,9 +208,13 @@ class OutOfCoreIngestor:
         regions: int,
         slots_per_region: int,
         config: SpillConfig = SpillConfig(),
+        *,
+        metrics_registry=None,
     ):
         self.num_vertices = int(num_vertices)
-        self.store = SpillStore(regions, slots_per_region, config)
+        self.store = SpillStore(
+            regions, slots_per_region, config, metrics_registry=metrics_registry
+        )
         self._num_edges = 0
         self.last_repair = ""
 

@@ -13,6 +13,12 @@ two prior acceptances on the now-global ``graph`` mesh:
   with a scale-out to 12 and a preemption down to 7 interleaved
   (``StreamingEngine`` + ``ElasticController``).
 
+One tracer + metrics registry (repro.obs) spans all phases: the record
+additionally carries this process's Chrome-trace fragment, its local metric
+snapshot, the psum_host-aggregated global snapshot, a process-indexed peak
+RSS gauge, and drop-timings JSONL event logs — the observability acceptance
+surface the parent test checks (merge, sum-of-locals, byte-identical logs).
+
 Each process writes ONLY its local shard rows (`local_shard_rows`) plus a
 stats/event JSON to ``--out``; the parent test reassembles the global buffers
 from all processes' files and compares them byte-for-byte against the
@@ -45,6 +51,9 @@ from repro.elastic.rescale_exec import EDGE_BYTES, ElasticRescaler  # noqa: E402
 from repro.graphs import engine as E  # noqa: E402
 from repro.launch import mesh as MM  # noqa: E402
 from repro.launch import sharding as SH  # noqa: E402
+from repro.obs import metrics as OM  # noqa: E402
+from repro.obs import trace as OT  # noqa: E402
+from repro.obs import trace_export as OX  # noqa: E402
 from repro.stream import IncrementalOrderer, StreamingEngine, SyntheticStream  # noqa: E402
 from repro.stream.incremental import StreamConfig  # noqa: E402
 
@@ -97,10 +106,11 @@ def save_blocks(store: dict, name: str, arr) -> None:
         store[f"{name}__{lo}__{hi}"] = data
 
 
-def run_rescale_phase(src, dst, num_vertices, mesh, store: dict) -> dict:
+def run_rescale_phase(src, dst, num_vertices, mesh, store: dict,
+                      tracer=None, registry=None) -> dict:
     pid = jax.process_index()
     n = int(src.shape[0])
-    rescaler = ElasticRescaler()
+    rescaler = ElasticRescaler(tracer=tracer, metrics_registry=registry)
     d8 = E.pack_ordered_sharded(src, dst, num_vertices, 8, mesh)
     log(pid, f"packed k=8 over {len(jax.devices())} global devices")
 
@@ -158,16 +168,21 @@ def stream_script(ctl, stream, clock):
     ctl.ingest(stream.batch())
 
 
-def run_stream_phase(g, src, dst, mesh, store: dict) -> dict:
+def run_stream_phase(g, src, dst, mesh, store: dict,
+                     tracer=None, registry=None) -> dict:
     pid = jax.process_index()
     o = IncrementalOrderer(
         src.astype(np.int64), dst.astype(np.int64), g.num_vertices,
         regions=8, config=stream_config(),
     )
     force_partial_baseline(o)
-    eng = StreamingEngine(o, mesh)  # span_repair="device": the rung under test
+    # span_repair="device": the rung under test
+    eng = StreamingEngine(o, mesh, tracer=tracer, metrics_registry=registry)
     clock = [0.0]
-    ctl = ec.ElasticController(8, dead_after_s=5.0, clock=lambda: clock[0])
+    ctl = ec.ElasticController(
+        8, dead_after_s=5.0, clock=lambda: clock[0],
+        tracer=tracer, metrics_registry=registry,
+    )
     ctl.attach_stream(eng)
     stream = SyntheticStream(g, batch_size=STREAM_BATCH, seed=STREAM_SEED)
     stream_script(ctl, stream, clock)
@@ -194,10 +209,15 @@ def run_stream_phase(g, src, dst, mesh, store: dict) -> dict:
         "num_edges": o.num_edges,
         "events": events,
         "rung_counts": eng.rung_counts,
+        # Structured log with wall-clock fields zeroed: the only
+        # nondeterministic event content on a deterministic replica, so the
+        # parent asserts the two processes' logs are BYTE-identical.
+        "events_jsonl": ctl.events_jsonl(drop_timings=True),
     }
 
 
-def run_rebuild_phase(g, src, dst, mesh, store: dict) -> dict:
+def run_rebuild_phase(g, src, dst, mesh, store: dict,
+                      tracer=None, registry=None) -> dict:
     """ISSUE-6 acceptance: one async full rebuild (geo mode, flight 1) flies
     across the 2-process mesh — dispatch on batch 2, flight through batch 3,
     commit with a delta splice, two quiet batches around it. The parent
@@ -207,8 +227,11 @@ def run_rebuild_phase(g, src, dst, mesh, store: dict) -> dict:
         src.astype(np.int64), dst.astype(np.int64), g.num_vertices,
         regions=8, config=rebuild_config(),
     )
-    eng = StreamingEngine(o, mesh, full_rebuild="geo", rebuild_flight=REBUILD_FLIGHT)
-    ctl = ec.ElasticController(8)
+    eng = StreamingEngine(
+        o, mesh, full_rebuild="geo", rebuild_flight=REBUILD_FLIGHT,
+        tracer=tracer, metrics_registry=registry,
+    )
+    ctl = ec.ElasticController(8, tracer=tracer, metrics_registry=registry)
     ctl.attach_stream(eng)
     stream = SyntheticStream(g, batch_size=STREAM_BATCH, seed=REBUILD_SEED)
     states = []
@@ -241,6 +264,15 @@ def run_rebuild_phase(g, src, dst, mesh, store: dict) -> dict:
             for e in rebuilds
         ],
         "program_cache": eng.program_cache_counters(),
+        "events_jsonl": ctl.events_jsonl(drop_timings=True),
+    }
+
+
+def snapshot_to_json(snap: dict) -> dict:
+    """Registry snapshots carry numpy bucket vectors — JSON-ify them."""
+    return {
+        k: (np.asarray(v).tolist() if isinstance(v, np.ndarray) else float(v))
+        for k, v in snap.items()
     }
 
 
@@ -254,6 +286,14 @@ def main() -> None:
 
     g, src, dst = build_ordered()
     mesh = MM.make_graph_mesh()  # spans every process's devices
+    # ONE tracer + registry across all three phases (DESIGN.md §13): the
+    # trace fragment and metric snapshots below are the observability
+    # acceptance — per-process ingest/rung/rebuild/rescale span tracks that
+    # merge into a single Chrome trace, and a registry whose psum_host-
+    # aggregated snapshot must equal the sum of the per-process ones.
+    # set_tracer also routes launch/multihost's transfer.* spans here.
+    tracer = OT.set_tracer(OT.Tracer(capacity=1 << 16))
+    registry = OM.MetricsRegistry()
     store: dict = {}
     record = {
         "process_id": pid,
@@ -261,10 +301,25 @@ def main() -> None:
         "devices": len(jax.devices()),
         "device_process_map": SH.device_process_map(mesh).tolist(),
         "graph": {"num_vertices": g.num_vertices, "num_edges": g.num_edges},
-        "rescale": run_rescale_phase(src, dst, g.num_vertices, mesh, store),
+        "rescale": run_rescale_phase(src, dst, g.num_vertices, mesh, store,
+                                     tracer, registry),
     }
-    record["stream"] = run_stream_phase(g, src, dst, mesh, store)
-    record["rebuild"] = run_rebuild_phase(g, src, dst, mesh, store)
+    record["stream"] = run_stream_phase(g, src, dst, mesh, store, tracer, registry)
+    record["rebuild"] = run_rebuild_phase(g, src, dst, mesh, store, tracer, registry)
+
+    peak_mb = OM.record_peak_rss(registry)
+    local_snap = registry.snapshot()
+    global_snap = registry.snapshot_global(mesh)  # collective: same point everywhere
+    log(pid, f"obs: {tracer.recorded} spans, {len(local_snap)} snapshot entries, "
+             f"peak_rss={peak_mb:.1f}MB")
+    record["obs"] = {
+        "peak_rss_mb": peak_mb,
+        "spans_recorded": tracer.recorded,
+        "spans_dropped": tracer.dropped,
+        "trace": OX.chrome_trace(tracer, process=pid, process_name=f"proc{pid}"),
+        "local_snapshot": snapshot_to_json(local_snap),
+        "global_snapshot": snapshot_to_json(global_snap),
+    }
 
     os.makedirs(args.out, exist_ok=True)
     np.savez(os.path.join(args.out, f"proc{pid}.npz"), **store)

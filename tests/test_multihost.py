@@ -423,3 +423,98 @@ def test_stream_partial_escalations_ran_on_device_and_match_replay(cluster):
                 # partition→process map.
                 assert got["cross_process_bytes"] == w["cross_process_bytes"]
                 assert w["cross_process_bytes"] > 0  # 2×4 really crossed the NIC
+
+
+# ----------------------------------------------------------- observability
+REQUIRED_PHASES = {"ingest", "rung", "rebuild", "rescale"}
+
+
+def test_trace_fragments_merge_into_per_process_phase_tracks(cluster):
+    """Observability acceptance (DESIGN.md §13): each process exported a
+    valid Chrome-trace fragment covering every runtime phase, and the merged
+    trace keeps one track set per process — pid × phase swimlanes — with
+    timestamps rebased to a common origin."""
+    from repro.obs import trace_export as OX
+
+    records, _ = cluster
+    traces = []
+    for pid, rec in enumerate(records):
+        tr = rec["obs"]["trace"]
+        assert OX.validate_chrome_trace(tr) == []
+        assert rec["obs"]["spans_dropped"] == 0  # ring sized for the script
+        xs = [e for e in tr["traceEvents"] if e["ph"] == "X"]
+        assert {e["pid"] for e in xs} == {pid}
+        assert REQUIRED_PHASES <= {e["cat"] for e in xs}
+        traces.append(tr)
+    merged = OX.merge_traces(traces)
+    assert OX.validate_chrome_trace(merged) == []
+    xs = [e for e in merged["traceEvents"] if e["ph"] == "X"]
+    assert {e["pid"] for e in xs} == set(range(N_PROCS))
+    for pid in range(N_PROCS):
+        assert REQUIRED_PHASES <= {e["cat"] for e in xs if e["pid"] == pid}
+    assert min(e["ts"] for e in xs) == 0.0  # rebased to the earliest span
+    # Track naming metadata survived the merge for both processes.
+    meta = [e for e in merged["traceEvents"] if e["ph"] == "M"]
+    assert {e["pid"] for e in meta if e["name"] == "process_name"} == set(range(N_PROCS))
+
+
+def test_global_metrics_snapshot_equals_sum_of_locals(cluster):
+    """The psum_host-aggregated registry snapshot must equal the key-wise sum
+    of the per-process snapshots — the SUM-aggregation contract of
+    obs/metrics.py, exercised over a real 2-process collective. Exact for
+    integer-valued entries (counts, buckets); float-tolerance for wall-clock
+    sums (the collective may traverse float32 on non-x64 jax)."""
+    records, _ = cluster
+    locs = [rec["obs"]["local_snapshot"] for rec in records]
+    globs = [rec["obs"]["global_snapshot"] for rec in records]
+    assert set(locs[0]) == set(locs[1]) == set(globs[0]) == set(globs[1])
+    for key in sorted(globs[0]):
+        # Every process computed the identical aggregate (it's a collective).
+        np.testing.assert_array_equal(globs[0][key], globs[1][key], err_msg=key)
+        want = np.asarray(locs[0][key], np.float64) + np.asarray(locs[1][key], np.float64)
+        got = np.asarray(globs[0][key], np.float64)
+        if np.all(want == np.round(want)):
+            np.testing.assert_array_equal(got, want, err_msg=key)
+        else:
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7, err_msg=key)
+
+
+def test_peak_rss_surfaced_per_process_through_registry(cluster):
+    """S6: each process's peak RSS arrives through the metrics registry as a
+    process-indexed gauge — own index carries the value, the other zero — so
+    the summed global snapshot reads back BOTH peaks individually, replacing
+    the old stdout-marker parsing."""
+    records, _ = cluster
+    for pid, rec in enumerate(records):
+        local = rec["obs"]["local_snapshot"]
+        own = local[f"process.peak_rss_mb.p{pid}"]
+        other = local[f"process.peak_rss_mb.p{1 - pid}"]
+        assert own == pytest.approx(rec["obs"]["peak_rss_mb"]) and own > 0.0
+        assert other == 0.0
+    gs = records[0]["obs"]["global_snapshot"]
+    for pid, rec in enumerate(records):
+        assert gs[f"process.peak_rss_mb.p{pid}"] == pytest.approx(
+            rec["obs"]["peak_rss_mb"], rel=1e-5
+        )
+
+
+def test_event_jsonl_logs_byte_identical_across_processes(cluster):
+    """S2: with wall-clock fields zeroed (the only nondeterministic event
+    content on deterministic replicas), the structured JSONL event logs of
+    the two processes are BYTE-identical, and they round-trip to first-class
+    events preserving the shared seq order."""
+    from repro.obs import log as OL
+
+    records, _ = cluster
+    for phase in ("stream", "rebuild"):
+        text0 = records[0][phase]["events_jsonl"]
+        assert text0 == records[1][phase]["events_jsonl"]
+        events = OL.events_from_jsonl(text0)
+        assert len(events) == len(records[0][phase]["events"])
+        seqs = [e.seq for e in events]
+        assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+        kinds = {type(e).__name__ for e in events}
+        assert "IngestEvent" in kinds
+    # The rebuild phase's log carries the RebuildEvent at its commit seq.
+    rebuild_events = OL.events_from_jsonl(records[0]["rebuild"]["events_jsonl"])
+    assert [type(e).__name__ for e in rebuild_events].count("RebuildEvent") == 1

@@ -300,6 +300,29 @@ def test_program_cache_counters_snapshot_is_isolated():
     assert c.counters["scatter"]["misses"] == 1  # … never reaches the cache
 
 
+def test_program_cache_counters_snapshot_is_lazy_copy_on_write():
+    """Observability satellite: snapshotting costs a flag, not a deep copy —
+    the live mapping is handed out as-is and only CLONED by the cache's next
+    counter mutation, so every IngestEvent's snapshot stays frozen at its
+    emit-time values while back-to-back snapshots (no cache activity between
+    events) share one dict."""
+    c = ProgramCache(4)
+    c.get(("scatter", 1))  # miss
+    s1 = c.counters_snapshot()
+    s2 = c.counters_snapshot()
+    assert s1 is s2  # idle cache: zero copies between events
+    c.put(("scatter", 1), "x")
+    c.get(("scatter", 1))  # hit → clone-before-mutate detaches s1/s2
+    s3 = c.counters_snapshot()
+    assert s3 is not s1
+    assert s1 == {"scatter": {"hits": 0, "misses": 1, "evictions": 0}}
+    assert s3["scatter"] == {"hits": 1, "misses": 1, "evictions": 0}
+    # A new kind appearing later never leaks into earlier snapshots.
+    c.get(("splice", 2))  # miss on a fresh kind
+    s4 = c.counters_snapshot()
+    assert s4 is not s3 and "splice" in s4 and "splice" not in s3
+
+
 # ------------------------------------------------------------------- data
 def test_data_pipeline_deterministic_and_elastic():
     dc = dp.DataConfig(vocab_size=1000, seq_len=16, global_batch=64)

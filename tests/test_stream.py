@@ -575,6 +575,79 @@ def test_per_rung_counters_and_timings_recorded_on_ingest_events(ordered):
     assert events[-1].rung_total_s >= events[0].rung_total_s
     assert eng.rung_counts == {"none": 0, "partial": 3, "full": 0}
     assert sum(eng.rung_counts.values()) == len(events)
+
+
+def test_rung_total_s_cumulative_and_consistent_with_engine(ordered):
+    """Rung accounting contract (DESIGN.md §13): each IngestEvent's
+    rung_total_s is the engine's CUMULATIVE rung_s for that event's rung at
+    emit time — monotone per rung, never reset mid-stream — and every
+    monitored second lands in exactly one rung (the controller's monitor_s
+    envelops the engine's own accounting from just outside the call)."""
+    g, src, dst = ordered
+    o = IncrementalOrderer(
+        src, dst, g.num_vertices, regions=4,
+        config=StreamConfig(partial_drift=1.0, full_drift=99.0, span_regions=2),
+    )
+    o._baseline_kappa = o._kappa() / 1.5  # every monitor fires 'partial'
+    eng = StreamingEngine(o, MM.make_graph_mesh(1))
+    ctl = ec.ElasticController(4)
+    ctl.attach_stream(eng)
+    stream = SyntheticStream(g, batch_size=32, seed=29)
+    last_total: dict = {}
+    for _ in range(5):
+        ev = ctl.ingest(stream.batch())
+        assert ev.rung_total_s >= last_total.get(ev.escalation, 0.0)
+        last_total[ev.escalation] = ev.rung_total_s
+        # The emit-time snapshot IS the engine accumulator's current value.
+        assert ev.rung_total_s == pytest.approx(eng.rung_s[ev.escalation])
+        assert ev.rung_count == eng.rung_counts[ev.escalation]
+    events = [e for e in ctl.events if e.kind == "ingest"]
+    engine_total = sum(eng.rung_s.values())
+    monitor_total = sum(e.monitor_s for e in events)
+    assert engine_total <= monitor_total  # enveloped from outside
+    assert monitor_total - engine_total < 5e-3 * len(events)  # …by call overhead only
+
+
+def test_rebuild_s_matches_tracer_rebuild_spans(ordered):
+    """IngestEvent.rebuild_s (dispatch_s on the dispatch batch, commit_s on
+    the commit batch) must agree with the tracer's rebuild.dispatch /
+    rebuild.commit span for that same batch: the span envelops the timed
+    inner region, so duration >= rebuild_s and close. Flight batches report
+    rebuild_s == 0.0 — the per-monitor reset semantics."""
+    from repro.obs import trace as OT
+
+    g, src, dst = ordered
+    o = IncrementalOrderer(
+        src, dst, g.num_vertices, regions=4,
+        config=StreamConfig(partial_drift=1.0, full_drift=1.0),
+    )
+    o._baseline_kappa = o._kappa() / 1.5  # every unsuppressed monitor: 'full'
+    tracer = OT.Tracer(capacity=4096)
+    eng = StreamingEngine(
+        o, MM.make_graph_mesh(1), full_rebuild="geo", rebuild_flight=1,
+        tracer=tracer,
+    )
+    ctl = ec.ElasticController(4)
+    ctl.attach_stream(eng)
+    stream = SyntheticStream(g, batch_size=32, seed=31)
+    seen = set()
+    for _ in range(8):
+        n0 = len(tracer)
+        ev = ctl.ingest(stream.batch())
+        new = tracer.spans()[n0:]
+        if ev.rebuild_state in ("dispatch", "commit"):
+            spans = [s for s in new if s.name == f"rebuild.{ev.rebuild_state}"]
+            assert len(spans) == 1
+            assert ev.rebuild_s > 0.0
+            assert spans[0].duration_s >= ev.rebuild_s
+            assert spans[0].duration_s == pytest.approx(
+                ev.rebuild_s, rel=0.5, abs=5e-3
+            )
+            seen.add(ev.rebuild_state)
+        elif ev.rebuild_state == "flight":
+            assert ev.rebuild_s == 0.0
+            assert not [s for s in new if s.phase == "rebuild"]
+    assert seen == {"dispatch", "commit"}
 def test_streaming_engine_bit_identity_through_stream_and_rescales(ordered):
     """Small-scale version of the acceptance: ingest batches with two
     interleaved rescales; the sharded pack stays bit-identical to the host
