@@ -69,6 +69,42 @@ def check_stream(record: dict) -> list[str]:
     return failures
 
 
+def check_serve(record: dict) -> list[str]:
+    """Gate failures for a BENCH_serve.json record: the autoscaler must have
+    proven hysteresis (≥ 2 decisions each direction, zero flap pairs), the
+    serving SLO must hold, and the pack must have stayed byte-identical to
+    the oracle through every policy-driven rescale."""
+    failures = []
+    outs = _get(record, "autoscaler.scale_outs")
+    ins = _get(record, "autoscaler.scale_ins")
+    if outs is None or ins is None:
+        failures.append("autoscaler.scale_outs/scale_ins: missing")
+    elif int(outs) < 2 or int(ins) < 2:
+        failures.append(f"autoscaler moved k only {outs} out / {ins} in (need >= 2 each)")
+    flaps = _get(record, "autoscaler.flap_pairs")
+    if flaps is None:
+        failures.append("autoscaler.flap_pairs: missing")
+    elif int(flaps) != 0:
+        failures.append(f"autoscaler.flap_pairs {flaps} != 0")
+    frac = _get(record, "latency.slo_frac")
+    if frac is None:
+        failures.append("latency.slo_frac: missing")
+    elif float(frac) > 0.35:
+        failures.append(f"latency.slo_frac {frac} > 0.35")
+    p99 = _get(record, "latency.p99_s")
+    slo = _get(record, "scenario.slo_s")
+    if p99 is None or slo is None:
+        failures.append("latency.p99_s / scenario.slo_s: missing")
+    elif float(p99) > 3.0 * float(slo):
+        failures.append(f"latency.p99_s {p99} > 3x SLO {slo}")
+    ident = _get(record, "bit_identity.all_identical")
+    if ident is None:
+        failures.append("bit_identity.all_identical: missing")
+    elif ident is not True:
+        failures.append("bit_identity.all_identical is false")
+    return failures
+
+
 def check_trace(record: dict) -> list[str]:
     """Well-formedness gate for an exported Chrome-trace JSON (the CI
     multidevice smoke's trace.json artifact)."""
@@ -98,6 +134,7 @@ def check_outofcore(record: dict) -> list[str]:
 CHECKERS = {
     "BENCH_stream.json": check_stream,
     "BENCH_outofcore.json": check_outofcore,
+    "BENCH_serve.json": check_serve,
     "trace.json": check_trace,
 }
 

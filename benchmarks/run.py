@@ -16,6 +16,7 @@ MODULES = [
     ("fig13_migration", "benchmarks.bench_migration"),
     ("rescale_exec", "benchmarks.bench_rescale_exec"),
     ("stream_ingest", "benchmarks.bench_stream"),
+    ("serve_autoscale", "benchmarks.bench_serve"),
     ("multihost", "benchmarks.bench_multihost"),
     ("fig15_scalability", "benchmarks.bench_scalability"),
     ("table2_theory", "benchmarks.bench_theory"),

@@ -205,6 +205,47 @@ print(f"proc {jax.process_index()}/{jax.process_count()}: 4->6 moved "
           f"p99 {pct['p99']*1e3:.1f}ms, "
           f"{int(registry.counter('stream.scatter_ops').value)} scatter ops")
 
+    # 11. SERVE + AUTOSCALE: close the loop — a traffic-driven policy reads
+    #     the registry (queue depth, event rate, windowed p99) and moves k
+    #     through the controller while PageRank/SSSP/WCC queries run against
+    #     the live pack between ingest batches. One virtual clock drives the
+    #     workload, the controller, and the policy's cooldowns, so the whole
+    #     trajectory is deterministic in (seed, config); queries survive every
+    #     policy rescale bit-identically (DESIGN.md §14; the two-day diurnal
+    #     scenario lives in benchmarks/bench_serve.py → BENCH_serve.json).
+    from repro.elastic import autoscale as AS
+    from repro.elastic import controller as EC
+    from repro.launch import serve as SV
+    from repro.stream.workload import OpenLoopWorkload
+
+    reg4 = MetricsRegistry()
+    orderer4 = IncrementalOrderer(src, dst, g.num_vertices, regions=2)
+    engine4 = StreamingEngine(orderer4, MM.make_graph_mesh(1),
+                              metrics_registry=reg4)
+    ref = []
+    ctl = EC.ElasticController(2, clock=lambda: ref[0].now if ref else 0.0,
+                               metrics_registry=reg4)
+    ctl.attach_stream(engine4)
+    ctl.attach_autoscaler(AS.AutoscalePolicy(AS.AutoscaleConfig(
+        k_min=2, k_max=8, queue_high_per_host=2.0, queue_low=0.5,
+        ema=0.6, out_cooldown_s=4.0, in_cooldown_s=8.0)))
+    workload = OpenLoopWorkload(num_vertices=g.num_vertices, base_rate=8.0,
+                                day_ticks=32, diurnal_amp=0.8, seed=0)
+    loop = SV.ServeLoop(ctl, workload,
+                        updates=SyntheticStream(g, batch_size=64, seed=4),
+                        registry=reg4, config=SV.ServeConfig(probe_every=8))
+    ref.append(loop)
+    loop.run(32)
+    loop.drain()
+    assert engine4.verify_bit_identity()
+    s = loop.summary()
+    print(f"serve+autoscale: {s['served']} queries over one virtual day, "
+          f"k path {'->'.join(map(str, s['k_path']))} "
+          f"({s['scale_outs']} out / {s['scale_ins']} in), "
+          f"p50 {s['latency_p50_s']:.1f}s p99 {s['latency_p99_s']:.1f}s, "
+          f"{s['slo_violations']} SLO misses; pack bit-identical through "
+          f"every policy rescale")
+
 
 if __name__ == "__main__":
     main()

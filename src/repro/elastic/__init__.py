@@ -1,1 +1,1 @@
-from . import controller, expert_place, rescale_exec, resharder  # noqa: F401
+from . import autoscale, controller, expert_place, rescale_exec, resharder  # noqa: F401

@@ -126,13 +126,21 @@ class ElasticController:
         state_elements: int = 1_000_000,
         clock: Callable[[], float] = time.monotonic,
         rescaler=None,
+        k_min: int = 1,
         tracer=None,
         metrics_registry=None,
     ):
+        if k_min < 1:
+            raise ValueError("k_min must be >= 1: a plan to zero partitions is not a rescale")
         self.clock = clock
         self.dead_after_s = dead_after_s
         self.straggler_lag_steps = straggler_lag_steps
         self.state_elements = state_elements
+        # Eviction floor: poll() never drives k below this, however many
+        # hosts went dark in one poll — a scale plan to zero partitions has
+        # no executable meaning (and would zero the pack an attached engine
+        # holds). Autoscale policies carry their own (>= this) k_min.
+        self.k_min = int(k_min)
         now = self.clock()
         self.hosts = {h: HostState(h, now, 0) for h in range(num_hosts)}
         self.events: list = []  # ScaleEvents + IngestEvents, ordered by seq
@@ -140,6 +148,8 @@ class ElasticController:
         self._seq = 0  # one counter for all event kinds
         self.engine_data = None  # packed EngineData migrated on scale events
         self.stream = None  # StreamingEngine: scale events + ingest run on it
+        self.autoscaler = None  # AutoscalePolicy consulted by autoscale()
+        self._backlog = 0  # externally-reported work backlog (serve queue)
         self.rescale_stats: list = []
         # Observability (obs/, DESIGN.md §13): the event wall histogram and
         # the queue-depth / events-per-second gauges are the signals the
@@ -160,8 +170,11 @@ class ElasticController:
     def _mark_event(self) -> None:
         """Update the events/s gauge: an EMA of the inter-event rate (the
         smoothing keeps a bursty stream from whipsawing the autoscaler
-        signal; 0 until two events exist)."""
-        now = time.perf_counter()
+        signal; 0 until two events exist). Reads the INJECTED clock — the
+        same one heartbeat/poll liveness runs on — so a fake clock drives
+        the gauge deterministically in tests and the serve loop's virtual
+        timeline feeds the autoscaler consistently."""
+        now = self.clock()
         if self._last_event_t is not None:
             dt = now - self._last_event_t
             if dt > 0:
@@ -200,16 +213,40 @@ class ElasticController:
             self.hosts[base + i] = HostState(base + i, now, 0)
         return self._emit("scale_out", k_old, self.k, (), f"+{n} provisioned hosts")
 
+    def _clamp_eviction(self, evict: list) -> tuple[list, str]:
+        """Apply the ``k_min`` floor to an eviction list: retain the
+        most-recently-heard-from candidates so the survivors are the best
+        liveness bets. Returns (evictable hosts, clamp note for the event
+        reason — empty when the floor never engaged)."""
+        survivors = self.k - len(evict)
+        if survivors >= self.k_min:
+            return evict, ""
+        keep = self.k_min - survivors
+        # Stalest-first, so the retained tail is the most recently beating.
+        ranked = sorted(evict, key=lambda hid: (self.hosts[hid].last_beat, hid))
+        retained = sorted(ranked[len(ranked) - keep :])
+        return ranked[: len(ranked) - keep], (
+            f" (clamped at k_min={self.k_min}: retained hosts {retained})"
+        )
+
     def poll(self) -> Optional[ScaleEvent]:
-        """Detect failures/stragglers; emit at most one event per poll."""
+        """Detect failures/stragglers; emit at most one event per poll.
+        Eviction never drives k below ``k_min``: when every host went dark
+        in one window, the most-recently-beating hosts stay in the working
+        set (surfaced in the event reason) rather than emitting a scale
+        plan to zero partitions."""
         now = self.clock()
         dead = [h.host_id for h in self.hosts.values() if h.alive and now - h.last_beat > self.dead_after_s]
         if dead:
+            dead, clamp = self._clamp_eviction(dead)
+            if not dead:
+                return None  # the floor retained every candidate: no event
             k_old = self.k
             for hid in dead:
                 self.hosts[hid].alive = False
             return self._emit(
-                "scale_in", k_old, self.k, tuple(dead), f"hosts {dead} missed heartbeats"
+                "scale_in", k_old, self.k, tuple(dead),
+                f"hosts {dead} missed heartbeats{clamp}",
             )
         alive = [h for h in self.hosts.values() if h.alive]
         if len(alive) >= 2:
@@ -218,11 +255,15 @@ class ElasticController:
             if lag:
                 # Straggler mitigation = evict + rescale (chunk boundaries shift
                 # away from the slow host; its chunk is Thm.-2-cheap to move).
+                lag, clamp = self._clamp_eviction(lag)
+                if not lag:
+                    return None
                 k_old = self.k
                 for hid in lag:
                     self.hosts[hid].alive = False
                 return self._emit(
-                    "straggler", k_old, self.k, tuple(lag), f"hosts {lag} lag >{self.straggler_lag_steps} steps"
+                    "straggler", k_old, self.k, tuple(lag),
+                    f"hosts {lag} lag >{self.straggler_lag_steps} steps{clamp}",
                 )
         return None
 
@@ -256,6 +297,52 @@ class ElasticController:
         pack has gaps, which the range-copy rescaler correctly rejects.
         """
         self.stream = stream
+
+    def attach_autoscaler(self, policy) -> None:
+        """Attach an ``elastic.autoscale.AutoscalePolicy``: ``autoscale()``
+        then closes the traffic→k loop, reading the metrics registry this
+        controller publishes to and executing the policy's decisions through
+        the same ``_execute`` path membership changes use."""
+        if policy.config.k_min < self.k_min:
+            raise ValueError(
+                f"policy k_min={policy.config.k_min} below the controller's "
+                f"eviction floor k_min={self.k_min}"
+            )
+        self.autoscaler = policy
+
+    def note_backlog(self, depth: int) -> None:
+        """Report an external work backlog (a serve loop's query queue) into
+        the ``controller.queue_depth`` gauge — the autoscaler's queue signal.
+        The gauge always reads backlog + rebuilds-in-flight, so ingest-side
+        pressure and serve-side pressure land on one signal."""
+        self._backlog = int(depth)
+        self._m_queue.set(self._backlog + int(getattr(self.stream, "rebuilds_in_flight", 0)))
+
+    def autoscale(self) -> Optional[ScaleEvent]:
+        """Consult the attached policy against the current metrics and clock;
+        execute at most one decision. Scale-out provisions fresh host ids
+        (the ``add_hosts`` path); scale-in retires the highest-id alive hosts
+        — the CEP chunk boundary shifts are Thm.-2-cheap either way. Returns
+        the executed ScaleEvent, or None (no policy / no decision)."""
+        if self.autoscaler is None:
+            return None
+        decision = self.autoscaler.decide(
+            k=self.k, now=self.clock(), registry=self.metrics
+        )
+        if decision is None:
+            return None
+        k_new, reason = decision
+        k_old = self.k
+        if k_new > k_old:
+            base = max(self.hosts) + 1 if self.hosts else 0
+            now = self.clock()
+            for i in range(k_new - k_old):
+                self.hosts[base + i] = HostState(base + i, now, 0)
+            return self._emit("scale_out", k_old, self.k, (), reason)
+        retired = sorted(h.host_id for h in self.hosts.values() if h.alive)[k_new - k_old:]
+        for hid in retired:
+            self.hosts[hid].alive = False
+        return self._emit("scale_in", k_old, self.k, tuple(retired), reason)
 
     def _cache_counters(self) -> dict:
         """Per-kind program-cache counters of the attached stream engine (a
@@ -304,7 +391,7 @@ class ElasticController:
         monitor_s = time.perf_counter() - t0
         self._drain_rebuilds()
         self._m_wall.observe(stats.elapsed_s + monitor_s)
-        self._m_queue.set(int(getattr(self.stream, "rebuilds_in_flight", 0)))
+        self._m_queue.set(self._backlog + int(getattr(self.stream, "rebuilds_in_flight", 0)))
         self._m_ingests.inc()
         self._mark_event()
         # Per-rung ladder accounting (StreamingEngine keeps the counters; a

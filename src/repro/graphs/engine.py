@@ -487,3 +487,172 @@ def wcc(data, mesh=None, *, max_iters: int = 64):
 def comm_volume_per_iteration(data: EngineData, bytes_per_value: int = 8) -> int:
     """Paper §6.4 COM metric: each mirror sends + receives one value/iteration."""
     return 2 * data.mirrors * bytes_per_value
+
+
+# --------------------------------------------------------------------------
+# Cached pure-operand query programs (the serving path, launch/serve.py).
+#
+# The module-level entry points above close over the pack and build a fresh
+# ``jax.jit(lambda ...)`` per call — every call is a new callable, so every
+# call retraces. Fine for a benchmark that runs PageRank once; fatal for a
+# front end answering thousands of queries. ``query_program`` returns a
+# callable that takes the pack OPERANDS (edges, mask, degrees[, source])
+# explicitly: the jit compiles once per operand shape, so one program serves
+# every query against any pack of that layout — including the packs that
+# rescale / async full rebuild swap underneath a live StreamingEngine, which
+# only retrace when (k_pad, e_cap) actually changes. SSSP's source is a
+# traced int32 operand, so querying a new source is a cache hit, not a
+# retrace. Programs iterate over the ``graph`` mesh axis (the sharded-pack
+# layout both ShardedEngineData and StreamingEngine.data use).
+
+
+def _pagerank_program(v: int, mesh, axis: str, iterations: int, damping: float):
+    def local(edges, mask, contrib):
+        e = edges.reshape(-1, 2)
+        m = mask.reshape(-1)
+        y = jnp.zeros((v,), jnp.float32)
+        y = y.at[e[:, 1]].add(contrib[e[:, 0]] * m)
+        y = y.at[e[:, 0]].add(contrib[e[:, 1]] * m)
+        return lax.psum(y, axis)
+
+    step = _sharded(local, mesh, axis, extra_in=(P(),), extra_out=P())
+
+    def run(edges, mask, degrees):
+        deg = jnp.maximum(degrees, 1.0)
+        dangling = degrees == 0
+
+        def body(x, _):
+            y = step(edges, mask, x / deg)
+            dm = jnp.sum(jnp.where(dangling, x, 0.0))
+            return (1 - damping) / v + damping * (y + dm / v), None
+
+        x0 = jnp.full((v,), 1.0 / v, jnp.float32)
+        x, _ = lax.scan(body, x0, None, length=iterations)
+        return x
+
+    jitted = jax.jit(run)
+
+    def call(edges, mask, degrees):
+        with mesh:
+            return jitted(edges, mask, degrees)
+
+    return call
+
+
+def _sssp_program(v: int, mesh, axis: str, max_iters: int):
+    inf = jnp.float32(1e9)
+
+    def local(edges, mask, dist):
+        e = edges.reshape(-1, 2)
+        m = mask.reshape(-1) > 0
+        cand = jnp.full((v,), inf)
+        du = jnp.where(m, dist[e[:, 0]] + 1.0, inf)
+        dv = jnp.where(m, dist[e[:, 1]] + 1.0, inf)
+        cand = cand.at[e[:, 1]].min(du)
+        cand = cand.at[e[:, 0]].min(dv)
+        return lax.pmin(cand, axis)
+
+    step = _sharded(local, mesh, axis, extra_in=(P(),), extra_out=P())
+
+    def cond(state):
+        _, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body_fn(edges, mask):
+        def body(state):
+            dist, _, it = state
+            nd = jnp.minimum(dist, step(edges, mask, dist))
+            return nd, jnp.any(nd < dist), it + 1
+
+        return body
+
+    def run(edges, mask, source):
+        d0 = jnp.full((v,), inf).at[source].set(0.0)
+        return lax.while_loop(cond, body_fn(edges, mask), (d0, jnp.bool_(True), 0))
+
+    jitted = jax.jit(run)
+
+    def call(edges, mask, source=0):
+        with mesh:
+            dist, _, iters = jitted(edges, mask, jnp.int32(source))
+        return dist, int(iters)
+
+    return call
+
+
+def _wcc_program(v: int, mesh, axis: str, max_iters: int):
+    def local(edges, mask, lab):
+        e = edges.reshape(-1, 2)
+        m = mask.reshape(-1) > 0
+        big = jnp.float32(1e9)
+        cand = jnp.full((v,), big)
+        lu = jnp.where(m, lab[e[:, 0]], big)
+        lv = jnp.where(m, lab[e[:, 1]], big)
+        cand = cand.at[e[:, 1]].min(lu)
+        cand = cand.at[e[:, 0]].min(lv)
+        return lax.pmin(cand, axis)
+
+    step = _sharded(local, mesh, axis, extra_in=(P(),), extra_out=P())
+
+    def cond(state):
+        _, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body_fn(edges, mask):
+        def body(state):
+            lab, _, it = state
+            nl = jnp.minimum(lab, step(edges, mask, lab))
+            return nl, jnp.any(nl < lab), it + 1
+
+        return body
+
+    def run(edges, mask):
+        l0 = jnp.arange(v, dtype=jnp.float32)
+        return lax.while_loop(cond, body_fn(edges, mask), (l0, jnp.bool_(True), 0))
+
+    jitted = jax.jit(run)
+
+    def call(edges, mask):
+        with mesh:
+            lab, _, iters = jitted(edges, mask)
+        return lab, int(iters)
+
+    return call
+
+
+QUERY_KINDS = ("pagerank", "sssp", "wcc")
+_QUERY_PROGRAMS: dict = {}
+
+
+def query_program(
+    kind: str,
+    *,
+    num_vertices: int,
+    mesh,
+    iterations: int = 20,
+    damping: float = 0.85,
+    max_iters: int = 64,
+):
+    """Get-or-build the cached pure-operand program for ``kind``.
+
+    Keyed on (kind, V, mesh, params); the returned callable's jit adds the
+    per-shape level, so the full cache hierarchy is program → XLA executable
+    per pack layout. Call signatures: pagerank ``(edges, mask, degrees) →
+    ranks``; sssp ``(edges, mask, source=0) → (dist, iters)``; wcc
+    ``(edges, mask) → (lab, iters)``.
+    """
+    key = (kind, int(num_vertices), mesh, int(iterations), float(damping), int(max_iters))
+    prog = _QUERY_PROGRAMS.get(key)
+    if prog is not None:
+        return prog
+    axis = SH.GRAPH_AXIS
+    if kind == "pagerank":
+        prog = _pagerank_program(int(num_vertices), mesh, axis, int(iterations), float(damping))
+    elif kind == "sssp":
+        prog = _sssp_program(int(num_vertices), mesh, axis, int(max_iters))
+    elif kind == "wcc":
+        prog = _wcc_program(int(num_vertices), mesh, axis, int(max_iters))
+    else:
+        raise ValueError(f"unknown query kind {kind!r} (expected one of {QUERY_KINDS})")
+    _QUERY_PROGRAMS[key] = prog
+    return prog

@@ -116,11 +116,22 @@ class Histogram:
         """True while the sample ring still holds every observation."""
         return self.total <= self._samples.maxlen
 
-    def percentile(self, q: float) -> float:
+    def percentile(self, q: float, *, window: int | None = None) -> float:
         """q-th percentile (q in [0, 100]); exact until the ring overflows,
-        then the upper bucket bound at the target rank. 0.0 when empty."""
+        then the upper bucket bound at the target rank. 0.0 when empty.
+
+        ``window`` restricts the readout to the newest ``window`` retained
+        samples — the load-signal view (an autoscaler reacting to the last N
+        observations, not the lifetime distribution). Always exact over what
+        the ring retains: the ring evicts oldest-first, so the newest
+        ``window <= sample_cap`` samples are exactly the newest ``window``
+        observations once at least that many have landed."""
         if self.total == 0:
             return 0.0
+        if window is not None and window > 0 and len(self._samples) > 0:
+            n = min(int(window), len(self._samples))
+            recent = list(self._samples)[-n:]
+            return float(np.percentile(np.asarray(recent), q))
         if self.exact:
             return float(np.percentile(np.asarray(self._samples), q))
         rank = q / 100.0 * self.total
@@ -226,7 +237,7 @@ class _NullMetric:
     def observe(self, v: float) -> None:
         pass
 
-    def percentile(self, q: float) -> float:
+    def percentile(self, q: float, *, window: int | None = None) -> float:
         return 0.0
 
     def percentiles(self) -> dict:

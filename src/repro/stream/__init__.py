@@ -17,8 +17,12 @@ PAPERS.md) without giving up the O(k)-plan, Thm.-2-minimal rescale property:
                     (LRU-by-escalation region blocks to host/disk) and the
                     lean content-addressed ingestor the out-of-core path
                     streams through.
+* ``workload``    — open-loop query traffic model (bursty + diurnal arrival
+                    process, stateless-hash deterministic) for the serving
+                    front end and the autoscaler benchmarks.
 """
 from .updates import EdgeUpdateBatch, SyntheticStream  # noqa: F401
 from .incremental import IncrementalOrderer, StreamConfig, best_insert_position  # noqa: F401
 from .ingest import StreamingEngine, IngestStats, StreamRescaleStats  # noqa: F401
 from .spill import SpillConfig, SpillStore, OutOfCoreIngestor  # noqa: F401
+from .workload import OpenLoopWorkload, QueryArrival  # noqa: F401

@@ -1,0 +1,235 @@
+"""Autoscaler boundary behavior: watermark strictness, cooldown thresholds,
+clamps, the no-signal guard, no-flapping under oscillating load, and bit
+identity of the pack through policy-driven rescales (ISSUE-9)."""
+import numpy as np
+import pytest
+
+from repro.elastic import autoscale as EA
+from repro.elastic import controller as ec
+from repro.obs import metrics as OM
+
+
+def _registry(queue=0.0, rate=0.0, walls=()):
+    r = OM.MetricsRegistry()
+    r.gauge("controller.queue_depth").set(queue)
+    r.gauge("controller.events_per_s").set(rate)
+    h = r.histogram("controller.batch_wall_s")
+    for w in walls:
+        h.observe(w)
+    return r
+
+
+# Unsmoothed (ema=1.0) so unit tests hit the raw watermark arithmetic.
+def _cfg(**kw):
+    base = dict(
+        k_min=1, k_max=8, step_out=2, step_in=1, queue_high_per_host=4.0,
+        queue_low=0.5, ema=1.0, out_cooldown_s=10.0, in_cooldown_s=30.0,
+    )
+    base.update(kw)
+    return EA.AutoscaleConfig(**base)
+
+
+# ------------------------------------------------------------ watermark edges
+def test_high_watermark_is_strictly_greater():
+    pol = EA.AutoscalePolicy(_cfg())
+    # Exactly AT the watermark (queue == 4.0/host × k) must NOT trigger.
+    assert pol.decide(k=2, now=0.0, registry=_registry(queue=8.0)) is None
+    assert pol.log[-1].held_by == "steady"
+    # One above does.
+    out = pol.decide(k=2, now=100.0, registry=_registry(queue=8.0 + 1e-9))
+    assert out is not None and out[0] == 4 and "queue" in out[1]
+
+
+def test_scale_in_requires_every_signal_calm():
+    walls = [0.01] * 5
+    pol = EA.AutoscalePolicy(_cfg(rate_low=2.0))
+    # Queue at the low watermark AND rate under its low bound → in.
+    got = pol.decide(k=4, now=0.0, registry=_registry(queue=0.5, rate=1.0, walls=walls))
+    assert got is not None and got[0] == 3
+    # Rate at/above rate_low vetoes (strict <) even with an empty queue.
+    pol2 = EA.AutoscalePolicy(_cfg(rate_low=2.0))
+    assert pol2.decide(k=4, now=0.0, registry=_registry(queue=0.0, rate=2.0, walls=walls)) is None
+    assert pol2.log[-1].held_by == "steady"
+
+
+def test_p99_signal_drives_both_directions():
+    slo = 0.1
+    pol = EA.AutoscalePolicy(_cfg(p99_high_s=slo, p99_low_frac=0.5))
+    # p99 over the SLO scales out even with an empty queue.
+    out = pol.decide(k=2, now=0.0, registry=_registry(walls=[0.2] * 10))
+    assert out is not None and out[0] == 4 and "p99" in out[1]
+    # p99 in the dead band [0.5·SLO, SLO] blocks scale-in.
+    pol2 = EA.AutoscalePolicy(_cfg(p99_high_s=slo, p99_low_frac=0.5))
+    assert pol2.decide(k=2, now=0.0, registry=_registry(walls=[0.07] * 10)) is None
+    # p99 under the low fraction allows it.
+    pol3 = EA.AutoscalePolicy(_cfg(p99_high_s=slo, p99_low_frac=0.5))
+    got = pol3.decide(k=2, now=0.0, registry=_registry(walls=[0.01] * 10))
+    assert got is not None and got[0] == 1
+
+
+# ------------------------------------------------------------------ cooldowns
+def test_out_cooldown_boundary_is_inclusive():
+    pol = EA.AutoscalePolicy(_cfg())
+    hot = _registry(queue=100.0)
+    assert pol.decide(k=2, now=0.0, registry=hot) is not None
+    # Strictly inside the window: held, and the log says why.
+    assert pol.decide(k=4, now=10.0 - 1e-6, registry=hot) is None
+    assert pol.log[-1].held_by == "cooldown"
+    # Exactly at expiry (elapsed == cooldown): re-armed.
+    assert pol.decide(k=4, now=10.0, registry=hot) is not None
+
+
+def test_scale_out_arms_the_in_window():
+    walls = [0.01] * 3
+    pol = EA.AutoscalePolicy(_cfg())
+    assert pol.decide(k=2, now=0.0, registry=_registry(queue=100.0, walls=walls)) is not None
+    calm = _registry(queue=0.0, walls=walls)
+    # Past the OUT cooldown but inside the IN window armed by the out: held.
+    assert pol.decide(k=4, now=15.0, registry=calm) is None
+    assert pol.log[-1].held_by == "cooldown"
+    assert pol.decide(k=4, now=30.0, registry=calm) is not None
+
+
+def test_scale_in_arms_the_out_window():
+    walls = [0.01] * 3
+    pol = EA.AutoscalePolicy(_cfg())
+    assert pol.decide(k=4, now=0.0, registry=_registry(queue=0.0, walls=walls)) is not None
+    # An immediate spike cannot reverse the shrink inside the out window …
+    assert pol.decide(k=3, now=5.0, registry=_registry(queue=100.0)) is None
+    assert pol.log[-1].held_by == "cooldown"
+    # … but can once it expires.
+    assert pol.decide(k=3, now=10.0, registry=_registry(queue=100.0)) is not None
+
+
+# --------------------------------------------------------------------- clamps
+def test_k_max_and_k_min_clamp_decisions():
+    hot = _registry(queue=1e6)
+    pol = EA.AutoscalePolicy(_cfg(k_max=4))
+    assert pol.decide(k=4, now=0.0, registry=hot) is None
+    assert pol.log[-1].held_by == "clamp"
+    # Step lands on the ceiling, not past it.
+    got = pol.decide(k=3, now=0.0, registry=hot)
+    assert got is not None and got[0] == 4
+    calm = _registry(queue=0.0, walls=[0.01])
+    pol2 = EA.AutoscalePolicy(_cfg(k_min=2))
+    assert pol2.decide(k=2, now=0.0, registry=calm) is None
+    assert pol2.log[-1].held_by == "clamp"
+    pol3 = EA.AutoscalePolicy(_cfg(k_min=2, step_in=5))
+    got = pol3.decide(k=4, now=0.0, registry=calm)
+    assert got is not None and got[0] == 2  # floor, not k - step
+
+    with pytest.raises(ValueError):
+        EA.AutoscaleConfig(k_min=3, k_max=2)
+    with pytest.raises(ValueError):
+        EA.AutoscaleConfig(ema=0.0)
+
+
+# ------------------------------------------------------------- no-signal guard
+def test_silent_registry_is_not_idleness():
+    # A registry that never saw load must not trigger scale-in: silence is
+    # "no signal", not "no load". Both a fresh registry and the NULL registry.
+    for reg in (_registry(), OM.NULL):
+        pol = EA.AutoscalePolicy(_cfg())
+        assert pol.decide(k=4, now=0.0, registry=reg) is None
+        assert pol.log[-1].held_by == "no_signal"
+
+
+# --------------------------------------------------- oscillating load, no flap
+def test_no_flapping_under_oscillating_load():
+    # Load square-waves well above/below the watermarks every tick — the
+    # worst case for a naive threshold policy. With EMA smoothing and both
+    # cooldown windows armed by every decision, opposite-direction decisions
+    # must stay >= out_cooldown apart (the structural no-flap property
+    # bench_serve gates on).
+    cfg = _cfg(ema=0.5, out_cooldown_s=5.0, in_cooldown_s=10.0, k_min=1, k_max=8)
+    pol = EA.AutoscalePolicy(cfg)
+    k = 4
+    decided = []  # (now, kind)
+    walls = [0.01] * 3
+    for t in range(200):
+        queue = 200.0 if t % 2 == 0 else 0.0
+        got = pol.decide(k=k, now=float(t), registry=_registry(queue=queue, walls=walls))
+        if got is not None:
+            kind = "out" if got[0] > k else "in"
+            decided.append((float(t), kind))
+            k = got[0]
+    assert decided, "oscillating load never produced a decision"
+    for (ta, ka), (tb, kb) in zip(decided, decided[1:]):
+        if ka != kb:
+            assert tb - ta >= cfg.out_cooldown_s, (
+                f"flap: {ka}@{ta} reversed by {kb}@{tb}"
+            )
+    # The EMA keeps the mean of the square wave in view: with the high
+    # watermark under the mean, the policy ratchets OUT and never flaps in.
+    assert all(kind == "out" for _, kind in decided)
+    assert k == cfg.k_max
+
+
+def test_ema_smoothing_absorbs_single_burst():
+    # One bursty reading must not trigger: with ema=0.2 a single 100-deep
+    # spike over a calm baseline stays under the 4/host × k=4 watermark.
+    pol = EA.AutoscalePolicy(_cfg(ema=0.2))
+    for t in range(5):
+        assert pol.decide(k=4, now=float(t), registry=_registry(queue=1.0)) is None
+    assert pol.decide(k=4, now=5.0, registry=_registry(queue=70.0)) is None
+    assert pol.log[-1].queue == pytest.approx(0.2 * 70.0 + 0.8 * pol.log[-2].queue)
+    # A SUSTAINED surge does trigger once the EMA catches up.
+    fired = None
+    for t in range(6, 12):
+        fired = pol.decide(k=4, now=float(t), registry=_registry(queue=70.0))
+        if fired:
+            break
+    assert fired is not None
+
+
+# --------------------------------------- policy-driven rescale, bit identity
+def test_policy_rescale_executes_on_stream_with_bit_identity():
+    from repro.core import ordering
+    from repro.core.graph import rmat_graph
+    from repro.launch import mesh as MM
+    from repro.stream import IncrementalOrderer, StreamingEngine, SyntheticStream
+
+    g = rmat_graph(7, 8, seed=0)
+    order = ordering.geo_order(g, seed=0)
+    src, dst = g.src[order].astype(np.int64), g.dst[order].astype(np.int64)
+    orderer = IncrementalOrderer(src, dst, g.num_vertices, regions=2)
+    engine = StreamingEngine(orderer, MM.make_graph_mesh(None))
+
+    t = [0.0]
+    reg = OM.MetricsRegistry()
+    ctl = ec.ElasticController(2, clock=lambda: t[0], metrics_registry=reg)
+    ctl.attach_stream(engine)
+    pol = EA.AutoscalePolicy(_cfg(out_cooldown_s=1.0, in_cooldown_s=2.0))
+    ctl.attach_autoscaler(pol)
+    stream = SyntheticStream(g, batch_size=8, seed=1)
+
+    assert ctl.autoscale() is None  # no signal yet: silence holds k
+    ctl.ingest(stream.batch())  # lands a wall observation + rate sample
+    ctl.note_backlog(100)  # serve-side pressure
+    ev_out = ctl.autoscale()
+    assert ev_out is not None and ev_out.kind == "scale_out" and ev_out.executed
+    assert ctl.k == 4 and engine.k == 4
+    assert engine.verify_bit_identity()  # pack byte-matches the slot oracle
+
+    t[0] = 10.0  # clear both cooldown windows
+    ctl.note_backlog(0)
+    ev_in = ctl.autoscale()
+    assert ev_in is not None and ev_in.kind == "scale_in" and ev_in.executed
+    assert ctl.k == 3 and engine.k == 3
+    assert engine.verify_bit_identity()
+    # Shared seq order across ingest + policy events, and signal-carrying
+    # reasons in the log.
+    seqs = [e.seq for e in ctl.events]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    assert "autoscale out" in ev_out.reason and "autoscale in" in ev_in.reason
+    # Ingest keeps working on the rescaled pack.
+    ctl.ingest(stream.batch())
+    assert engine.verify_bit_identity()
+
+
+def test_attach_autoscaler_respects_controller_floor():
+    ctl = ec.ElasticController(4, k_min=2)
+    with pytest.raises(ValueError):
+        ctl.attach_autoscaler(EA.AutoscalePolicy(_cfg(k_min=1)))
+    ctl.attach_autoscaler(EA.AutoscalePolicy(_cfg(k_min=2)))
+    assert ctl.autoscale() is None  # NULL registry: no signal, no decision

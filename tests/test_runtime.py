@@ -112,6 +112,54 @@ def test_scale_event_seq_is_monotonic_across_controllers_and_kinds():
     assert ec.ElasticController(2).add_hosts(1).seq == 0
 
 
+def test_mark_event_rate_gauge_runs_on_injected_clock():
+    # Regression: _mark_event used to read time.perf_counter() directly, so
+    # the events/s gauge — the autoscaler's rate signal — could not be driven
+    # by a fake clock and disagreed with heartbeat/poll liveness timing.
+    from repro.obs import metrics as OM
+
+    t = [0.0]
+    reg = OM.MetricsRegistry()
+    ctl = ec.ElasticController(2, clock=lambda: t[0], metrics_registry=reg)
+    gauge = reg.gauge("controller.events_per_s")
+    ctl.add_hosts(1)
+    assert gauge.value == 0.0  # one event: no inter-event interval yet
+    t[0] = 2.0  # exactly 0.5 events/s on the FAKE timeline
+    ctl.add_hosts(1)
+    assert gauge.value == pytest.approx(0.5)
+    t[0] = 2.5  # 2 events/s raw → EMA 0.8*0.5 + 0.2*2.0
+    ctl.add_hosts(1)
+    assert gauge.value == pytest.approx(0.8 * 0.5 + 0.2 * 2.0)
+    # A frozen clock between events leaves the gauge untouched (dt == 0).
+    before = gauge.value
+    ctl.add_hosts(1)
+    assert gauge.value == before
+
+
+def test_poll_eviction_clamps_at_k_min_floor():
+    # Regression: evicting every laggard in one poll could drive k to 0 and
+    # emit a scale plan to zero partitions. The floor keeps the most recently
+    # beating hosts alive and surfaces the clamp in the event reason.
+    t = [0.0]
+    ctl = ec.ElasticController(4, dead_after_s=5.0, clock=lambda: t[0], k_min=2)
+    ctl.heartbeat(2, step=1)
+    t[0] = 1.0
+    ctl.heartbeat(3, step=1)  # host 3 beat most recently, then 2, then 0/1
+    t[0] = 10.0  # ALL hosts are now past dead_after_s
+    ev = ctl.poll()
+    assert ev is not None and ev.kind == "scale_in"
+    assert ctl.k == 2  # floor held: k never reached 0
+    assert set(ev.lost_hosts) == {0, 1}  # stalest evicted, freshest retained
+    assert ctl.hosts[2].alive and ctl.hosts[3].alive
+    assert "clamped at k_min=2" in ev.reason and "[2, 3]" in ev.reason
+    # When the floor retains EVERY candidate there is no event at all.
+    ctl2 = ec.ElasticController(1, dead_after_s=5.0, clock=lambda: t[0], k_min=1)
+    t[0] += 10.0  # the lone host goes dark — but it IS the floor
+    assert ctl2.poll() is None and ctl2.k == 1
+    with pytest.raises(ValueError):
+        ec.ElasticController(2, k_min=0)
+
+
 # ---------------------------------------------------------------- ProgramCache
 # The LRU is load-bearing for three program families (rescale migration,
 # ingest scatter, streaming compact) — unit-test the container itself, not
