@@ -131,8 +131,53 @@ def check_outofcore(record: dict) -> list[str]:
     return failures
 
 
+def check_recovery(record: dict) -> list[str]:
+    """Gate failures for a BENCH_recovery.json record (ISSUE-10): recovery
+    must be exact (bit identity), the detect → re-plan → restore → commit
+    path must stay within a generous latency bound, and the partition-scoped
+    restore bill must scale with LOST partitions, not |E| — every series
+    point within npz-container slack of its lost-partition footprint."""
+    failures = []
+    if _get(record, "bit_identity") is not True:
+        failures.append("bit_identity is not true — recovery diverged")
+    total = _get(record, "recovery.total_s")
+    if total is None:
+        failures.append("recovery.total_s: missing")
+    elif float(total) > 60.0:
+        failures.append(f"recovery.total_s {total} > 60.0")
+    series = _get(record, "restored_bytes")
+    if not isinstance(series, list) or not series:
+        failures.append("restored_bytes series: missing")
+        return failures
+    prev = -1
+    for p in series:
+        n, br, lb = p.get("lost_partitions"), p.get("bytes_read"), p.get("lost_bytes")
+        if br is None or lb is None:
+            failures.append(f"restored_bytes[{n}]: missing bytes fields")
+            continue
+        if p.get("bit_identity") is not True:
+            failures.append(f"restored_bytes[{n}]: partition restore diverged")
+        if float(br) > float(lb) * 1.5:
+            failures.append(
+                f"restored_bytes[{n}]: {br} B read > 1.5x the {lb} B lost "
+                "(partition restore no longer scales with what was lost)"
+            )
+        if float(br) <= prev:
+            failures.append(f"restored_bytes[{n}]: bytes not increasing with lost count")
+        prev = float(br)
+    k0 = _get(record, "config.k0")
+    frac1 = series[0].get("frac_of_full_restore")
+    if k0 and frac1 is not None and float(frac1) > 2.0 / float(k0):
+        failures.append(
+            f"restored_bytes[1]: {frac1} of a full restore exceeds 2/k0 — "
+            "a single lost partition is paying for the whole graph"
+        )
+    return failures
+
+
 CHECKERS = {
     "BENCH_stream.json": check_stream,
+    "BENCH_recovery.json": check_recovery,
     "BENCH_outofcore.json": check_outofcore,
     "BENCH_serve.json": check_serve,
     "trace.json": check_trace,

@@ -126,6 +126,19 @@ class AutoscalePolicy:
         a = self.config.ema
         return new if prev is None else (1.0 - a) * prev + a * new
 
+    def note_external_scale(self, now: float) -> None:
+        """An EXTERNAL actor changed k (a failure shrink through
+        ``ElasticController.report_failure``, an operator override): arm both
+        cooldown windows exactly like a policy decision would. Without this,
+        a failure shrink looks like free headroom and the policy may bounce k
+        right back out (or pile a policy shrink on top) while the cluster is
+        still re-committing the restored pack — the same flap the
+        double-armed windows exist to prevent. Never shortens a window
+        already armed further out."""
+        c = self.config
+        self._next_out_t = max(self._next_out_t, now + c.out_cooldown_s)
+        self._next_in_t = max(self._next_in_t, now + c.in_cooldown_s)
+
     def decide(self, *, k: int, now: float, registry) -> Optional[tuple[int, str]]:
         """At most one decision per call: (k_new, reason) or None. Reads the
         registry's current values, advances the EMAs, honors cooldowns and

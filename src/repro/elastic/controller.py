@@ -96,6 +96,29 @@ class IngestEvent:
 
 
 @dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """An UNPLANNED membership loss (preemption, crash) detected by the
+    liveness layer (launch.multihost.LeaseBoard or heartbeat expiry) and
+    reported through ``report_failure``. Sequenced on the shared monotonic
+    counter immediately BEFORE the scale-in event that re-plans k over the
+    survivors — detection precedes the plan in the total order, exactly the
+    order the system learned about it. Restore accounting (Thm-2-style: the
+    recovery bill is the lost partitions' chunk bytes + the WAL tail, not
+    graph size) rides on the event when the caller ran a restore."""
+
+    kind: str  # always "failure"
+    lost_hosts: tuple
+    k_old: int
+    k_new: int  # the re-plan over survivors (k_min floor applied)
+    detect_s: float  # lease-expiry detection latency (0 when not measured)
+    reason: str
+    restored_bytes: int = 0  # checkpoint chunk + WAL-tail bytes the restore read
+    restore_s: float = 0.0
+    replayed_records: int = 0  # WAL tail length replayed onto the snapshot
+    seq: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
 class RebuildEvent:
     """A COMPLETED async full rebuild (committed or aborted). Emitted when
     the controller drains the engine's rebuild log, so ``seq`` is assigned at
@@ -161,7 +184,10 @@ class ElasticController:
         self._m_rate = self.metrics.gauge("controller.events_per_s")
         self._m_ingests = self.metrics.counter("controller.ingest_events")
         self._m_scales = self.metrics.counter("controller.scale_events")
+        self._m_failures = self.metrics.counter("controller.failure_events")
         self._last_event_t: Optional[float] = None
+        self.checkpoint = None  # SlotCheckpoint making ingested batches durable
+        self._batch_step = -1  # durable batch index the checkpoint records under
 
     @property
     def tracer(self):
@@ -310,6 +336,64 @@ class ElasticController:
             )
         self.autoscaler = policy
 
+    def attach_checkpoint(self, ckpt) -> None:
+        """Attach a ``checkpoint.SlotCheckpoint``: every ingested batch then
+        becomes durable (a WAL record, or a snapshot at the interval / after
+        a re-layout) and every EXECUTED rescale writes a scale barrier — the
+        state ``report_failure`` recoveries restore from."""
+        if self.stream is None or getattr(self.stream, "orderer", None) is None:
+            raise ValueError(
+                "attach_stream first: the checkpoint snapshots the engine's orderer"
+            )
+        self.checkpoint = ckpt
+
+    def report_failure(
+        self,
+        lost_hosts,
+        *,
+        detect_s: float = 0.0,
+        reason: str = "process lease expired",
+        restored_bytes: int = 0,
+        restore_s: float = 0.0,
+        replayed_records: int = 0,
+    ) -> tuple[FailureEvent, Optional[ScaleEvent]]:
+        """Treat process loss as an UNPLANNED rescale: mark the lost hosts
+        dead (k_min floor applied, like ``poll`` eviction), sequence a
+        FailureEvent, and re-plan k over the survivors through the same
+        ``_emit``/``_execute`` path every planned decision takes. A failure
+        shrink arms BOTH autoscaler cooldown windows like any other executed
+        decision — the policy must not bounce k right back out (or further
+        in) while the cluster is still settling. Returns (failure event,
+        executed scale event or None when the floor retained every host)."""
+        lost = [int(h) for h in lost_hosts if h in self.hosts and self.hosts[h].alive]
+        k_old = self.k
+        evict, clamp = self._clamp_eviction(lost)
+        for hid in evict:
+            self.hosts[hid].alive = False
+        fev = FailureEvent(
+            kind="failure",
+            lost_hosts=tuple(evict),
+            k_old=k_old,
+            k_new=self.k,
+            detect_s=float(detect_s),
+            reason=f"{reason}{clamp}",
+            restored_bytes=int(restored_bytes),
+            restore_s=float(restore_s),
+            replayed_records=int(replayed_records),
+            seq=self._next_seq(),
+        )
+        self.events.append(fev)
+        self._m_failures.inc()
+        self._mark_event()
+        sev = None
+        if evict:
+            sev = self._emit(
+                "scale_in", k_old, self.k, tuple(evict), f"failure shrink: {reason}{clamp}"
+            )
+            if self.autoscaler is not None:
+                self.autoscaler.note_external_scale(self.clock())
+        return fev, sev
+
     def note_backlog(self, depth: int) -> None:
         """Report an external work backlog (a serve loop's query queue) into
         the ``controller.queue_depth`` gauge — the autoscaler's queue signal.
@@ -390,6 +474,11 @@ class ElasticController:
         escalation = self.stream.monitor()
         monitor_s = time.perf_counter() - t0
         self._drain_rebuilds()
+        if self.checkpoint is not None:
+            # Durability point: the batch AND any monitor-run repair/rebuild
+            # are applied — WAL-append (or snapshot) their slot writes now.
+            self._batch_step += 1
+            self.checkpoint.note_batch(self.stream.orderer, batch, self._batch_step)
         self._m_wall.observe(stats.elapsed_s + monitor_s)
         self._m_queue.set(self._backlog + int(getattr(self.stream, "rebuilds_in_flight", 0)))
         self._m_ingests.inc()
@@ -447,6 +536,10 @@ class ElasticController:
             cross_device_bytes = stats.cross_device_bytes
             cross_process_bytes = stats.cross_process_bytes
             frac = stats.moved_edges / max(stats.num_edges, 1)
+            if self.checkpoint is not None:
+                # Scale barrier: replay re-runs relayout(k_new) here instead
+                # of replaying slot ops across the geometry change.
+                self.checkpoint.note_scale(self.stream.orderer, k_new, self._batch_step)
         elif self.stream is None and self.engine_data is not None and k_new not in (0, self.engine_data.k):
             if self._rescaler is None:
                 from .rescale_exec import ElasticRescaler

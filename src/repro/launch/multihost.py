@@ -54,6 +54,8 @@ from . import sharding as SH
 
 __all__ = [
     "ClusterSpec",
+    "LeaseBoard",
+    "LocalCluster",
     "LocalClusterResult",
     "ProcResult",
     "initialize_distributed",
@@ -66,6 +68,7 @@ __all__ = [
     "psum_host",
     "host_read",
     "local_shard_rows",
+    "launch_local_cluster",
     "spawn_local_cluster",
 ]
 
@@ -129,6 +132,117 @@ def initialize_from_env(environ=None) -> ClusterSpec | None:
     )
     initialize_distributed(spec.coordinator, spec.num_processes, spec.process_id)
     return spec
+
+
+# ---------------------------------------------------------------- liveness
+class LeaseBoard:
+    """File-based liveness leases for a process group (DESIGN.md §15).
+
+    Worker process ``i`` stamps ``lease_p{i}.json`` with its batch step and
+    the lease clock after every unit of progress; anyone holding the shared
+    directory (the drill parent, a sibling process) classifies the group
+    without any collective — which is the point: a process that died inside
+    a gloo collective strands its peers, so detection must not itself ride
+    on the collective plane. Stamps are written via tmp+rename, so a reader
+    never sees a torn lease; a SIGKILL mid-stamp leaves the previous stamp.
+
+    The clock follows the runtime's injected-clock convention
+    (``ElasticController(clock=...)``): default ``time.monotonic``, which is
+    CLOCK_MONOTONIC on Linux — one system-wide timeline every local process
+    shares, so cross-process lease ages are directly comparable. Tests
+    inject a fake clock and drive expiry deterministically.
+
+    A process that never stamped is aged from the board's construction time
+    (a worker that died before its first stamp must still expire).
+    """
+
+    def __init__(self, directory, *, lease_s: float = 2.0, clock=time.monotonic):
+        self.dir = os.fspath(directory)
+        os.makedirs(self.dir, exist_ok=True)
+        self.lease_s = float(lease_s)
+        self.clock = clock
+        self._t0 = clock()
+
+    def _path(self, process_id: int) -> str:
+        return os.path.join(self.dir, f"lease_p{int(process_id)}.json")
+
+    def stamp(self, process_id: int, step: int) -> None:
+        """Renew process ``process_id``'s lease at progress ``step``."""
+        import json
+
+        path = self._path(process_id)
+        tmp = f"{path}.tmp{int(process_id)}"
+        with open(tmp, "w") as f:
+            f.write(json.dumps({"step": int(step), "t": float(self.clock())}))
+        os.replace(tmp, path)  # atomic: readers see whole stamps or nothing
+
+    def read(self, process_id: int) -> dict | None:
+        """The last stamp of ``process_id`` — {"step", "t"} — or None."""
+        import json
+
+        try:
+            with open(self._path(process_id)) as f:
+                return json.loads(f.read())
+        except (OSError, ValueError):
+            return None
+
+    def age(self, process_id: int, *, now: float | None = None) -> float:
+        """Seconds since the last stamp (since board construction when the
+        process never stamped)."""
+        now = self.clock() if now is None else now
+        stamp = self.read(process_id)
+        return now - (self._t0 if stamp is None else stamp["t"])
+
+    def step(self, process_id: int) -> int:
+        """Last stamped progress step (-1 before the first stamp)."""
+        stamp = self.read(process_id)
+        return -1 if stamp is None else int(stamp["step"])
+
+    def dead(self, num_processes: int, *, now: float | None = None) -> list[int]:
+        """Process ids whose lease age exceeds ``lease_s`` — the failure
+        detector's verdict at ``now``. A frozen stamp (the victim's last
+        write before SIGKILL) ages past the lease like silence does."""
+        now = self.clock() if now is None else now
+        return [
+            pid for pid in range(int(num_processes))
+            if self.age(pid, now=now) > self.lease_s
+        ]
+
+    def survivors(self, num_processes: int, *, now: float | None = None) -> list[int]:
+        gone = set(self.dead(num_processes, now=now))
+        return [pid for pid in range(int(num_processes)) if pid not in gone]
+
+    def surviving_devices(
+        self, num_processes: int, devs_per_proc: int, *, now: float | None = None
+    ) -> list[int]:
+        """Global device indices still backed by a live process. Global
+        devices are process-major after ``initialize_distributed`` (process
+        i owns [i·d, (i+1)·d)), so the surviving list is exactly what a
+        recovery mesh re-plans k over."""
+        d = int(devs_per_proc)
+        return [
+            dev
+            for pid in self.survivors(num_processes, now=now)
+            for dev in range(pid * d, (pid + 1) * d)
+        ]
+
+    def wait_for_step(
+        self, process_id: int, step: int, *, timeout: float = 60.0, poll_s: float = 0.01
+    ) -> int:
+        """Block (real time) until ``process_id``'s lease reaches ``step``.
+        The drill parent uses this to align its SIGKILL with a chosen batch
+        index. Returns the observed step; raises TimeoutError."""
+        deadline = time.monotonic() + timeout
+        while True:
+            s = self.step(process_id)
+            if s >= int(step):
+                return s
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"process {process_id} never reached step {step} "
+                    f"(last stamped {s}) within {timeout}s"
+                )
+            time.sleep(poll_s)
 
 
 # ------------------------------------------------------------- global arrays
@@ -301,27 +415,89 @@ class LocalClusterResult:
         return "\n".join(out)
 
 
-def spawn_local_cluster(
+class LocalCluster:
+    """A RUNNING localhost cluster: the handle ``launch_local_cluster``
+    returns. ``spawn_local_cluster`` is the blocking wrapper (launch +
+    ``wait``); the fault drill holds the handle instead, so it can SIGKILL a
+    chosen process mid-stream (``kill``) and still collect every process's
+    partial log afterwards. Whatever happens — clean exits, a timeout, an
+    injected kill, an exception in the caller — ``wait`` reaps every child
+    (kill + OS ``wait()``): no zombies holding the coordinator port."""
+
+    def __init__(self, coord: str, procs: list, captured: dict, threads: list):
+        self.coordinator = coord
+        self._procs = procs
+        self._captured = captured
+        self._threads = threads
+        self._notes: dict[int, list] = {pid: [] for pid in range(len(procs))}
+
+    @property
+    def n_procs(self) -> int:
+        return len(self._procs)
+
+    def poll(self, pid: int):
+        """Exit code of process ``pid``, or None while it runs."""
+        return self._procs[pid].poll()
+
+    def kill(self, pid: int, *, reason: str = "fault injection") -> None:
+        """SIGKILL process ``pid`` and reap it immediately. The hard-kill is
+        deliberate — a preempted instance gets no chance to flush, close, or
+        say goodbye, and the drill must model exactly that. The victim's
+        partial log stays captured (drained line-wise with the ``[p{pid}]``
+        prefix as it was emitted) and gets an attributable kill note."""
+        p = self._procs[pid]
+        if p.poll() is None:
+            p.kill()
+            p.wait()
+        self._notes[pid].append(
+            f"[p{pid}] [local_cluster] SIGKILL injected mid-run ({reason})\n"
+        )
+
+    def wait(self, timeout: float = 600.0) -> LocalClusterResult:
+        """Block until every process exits (killing the whole group at the
+        deadline), reap everything, and return all logs."""
+        deadline = time.monotonic() + timeout
+        timed_out = []
+        try:
+            for pid, p in enumerate(self._procs):
+                try:
+                    p.wait(timeout=max(0.0, deadline - time.monotonic()))
+                except subprocess.TimeoutExpired:
+                    p.kill()
+                    timed_out.append(pid)
+        finally:
+            for q in self._procs:
+                if q.poll() is None:
+                    q.kill()
+            for q in self._procs:
+                try:
+                    q.wait(timeout=30.0)  # REAP: a killed child must not linger
+                except subprocess.TimeoutExpired:  # pragma: no cover — SIGKILL
+                    pass  # cannot be refused; defensive only
+        for t in self._threads:  # readers end at EOF once every child exited
+            t.join(30.0)
+        results = []
+        for pid, p in enumerate(self._procs):
+            err = "".join(self._captured[(pid, 1)]) + "".join(self._notes[pid])
+            if pid in timed_out:
+                err += f"\n[p{pid}] [spawn_local_cluster] killed after {timeout}s timeout"
+            rc = p.returncode if p.returncode is not None else -1
+            results.append(ProcResult(pid, rc, "".join(self._captured[(pid, 0)]), err))
+        return LocalClusterResult(self.coordinator, tuple(results))
+
+
+def launch_local_cluster(
     n_procs: int,
     devs_per_proc: int,
     argv: list[str],
     *,
-    timeout: float = 600.0,
     env_extra: dict | None = None,
     cwd: str | None = None,
-) -> LocalClusterResult:
-    """Run ``python <argv>`` as an ``n_procs``-process localhost cluster.
-
-    Each process gets ``devs_per_proc`` forced host devices (XLA_FLAGS built
-    explicitly, preserving unrelated flags) and the ``REPRO_MH_*`` variables
-    pointing at a free-port coordinator on process 0 — the worker calls
-    ``initialize_from_env()`` and sees an ``n_procs · devs_per_proc``-device
-    global platform. Blocks until every process exits (or kills the whole
-    group on timeout) and returns all logs; the caller decides what a failure
-    means (tests print ``format_logs()``). Every captured log line is
-    prefixed ``[p{pid}] `` at emit time, so interleaved cluster output stays
-    attributable; marker scanners must search within lines, not at line
-    starts (benchmarks.common.parse_peak_rss does)."""
+) -> LocalCluster:
+    """Start ``python <argv>`` as an ``n_procs``-process localhost cluster
+    and return the RUNNING handle (see ``LocalCluster``); the caller must
+    ``wait()`` it. ``spawn_local_cluster`` wraps this for the common
+    launch-and-block case."""
     if n_procs < 1:
         raise ValueError("n_procs must be >= 1")
     coord = f"127.0.0.1:{free_port()}"
@@ -352,6 +528,8 @@ def spawn_local_cluster(
     # per pipe) lets each line be tagged with its process index AT EMIT TIME
     # — so interleaved multi-process logs stay attributable even when a test
     # prints them mid-run, instead of only in the per-process failure dump.
+    # This also means a SIGKILLed process's PARTIAL log is already captured
+    # the moment it dies — the drill's post-mortem needs no cooperation.
     captured: dict[tuple, list] = {(pid, s): [] for pid in range(n_procs) for s in (0, 1)}
 
     def drain(pid: int, stream, which: int) -> None:
@@ -368,26 +546,32 @@ def spawn_local_cluster(
     ]
     for t in threads:
         t.start()
-    deadline = time.monotonic() + timeout
-    timed_out = []
-    try:
-        for pid, p in enumerate(procs):
-            try:
-                p.wait(timeout=max(0.0, deadline - time.monotonic()))
-            except subprocess.TimeoutExpired:
-                p.kill()
-                timed_out.append(pid)
-    finally:
-        for q in procs:
-            if q.poll() is None:
-                q.kill()
-    for t in threads:  # readers end at EOF once every child has exited
-        t.join(30.0)
-    results = []
-    for pid, p in enumerate(procs):
-        err = "".join(captured[(pid, 1)])
-        if pid in timed_out:
-            err += f"\n[p{pid}] [spawn_local_cluster] killed after {timeout}s timeout"
-        rc = p.returncode if p.returncode is not None else -1
-        results.append(ProcResult(pid, rc, "".join(captured[(pid, 0)]), err))
-    return LocalClusterResult(coord, tuple(results))
+    return LocalCluster(coord, procs, captured, threads)
+
+
+def spawn_local_cluster(
+    n_procs: int,
+    devs_per_proc: int,
+    argv: list[str],
+    *,
+    timeout: float = 600.0,
+    env_extra: dict | None = None,
+    cwd: str | None = None,
+) -> LocalClusterResult:
+    """Run ``python <argv>`` as an ``n_procs``-process localhost cluster.
+
+    Each process gets ``devs_per_proc`` forced host devices (XLA_FLAGS built
+    explicitly, preserving unrelated flags) and the ``REPRO_MH_*`` variables
+    pointing at a free-port coordinator on process 0 — the worker calls
+    ``initialize_from_env()`` and sees an ``n_procs · devs_per_proc``-device
+    global platform. Blocks until every process exits (or kills the whole
+    group on timeout), REAPS every child, and returns all logs; the caller
+    decides what a failure means (tests print ``format_logs()``). Every
+    captured log line is prefixed ``[p{pid}] `` at emit time, so interleaved
+    cluster output stays attributable; marker scanners must search within
+    lines, not at line starts (benchmarks.common.parse_peak_rss does).
+    Fault drills that must kill a member mid-run hold the
+    ``launch_local_cluster`` handle instead."""
+    return launch_local_cluster(
+        n_procs, devs_per_proc, argv, env_extra=env_extra, cwd=cwd
+    ).wait(timeout)

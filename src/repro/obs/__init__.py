@@ -23,6 +23,7 @@ from .metrics import (  # noqa: F401
     NullRegistry,
     peak_rss_mb,
     record_peak_rss,
+    record_process_gauge,
 )
 from .trace_export import (  # noqa: F401
     chrome_trace,

@@ -33,6 +33,7 @@ def _event_types() -> dict:
         "ScaleEvent": C.ScaleEvent,
         "IngestEvent": C.IngestEvent,
         "RebuildEvent": C.RebuildEvent,
+        "FailureEvent": C.FailureEvent,
     }
 
 

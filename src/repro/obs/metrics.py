@@ -53,6 +53,7 @@ __all__ = [
     "NULL",
     "peak_rss_mb",
     "record_peak_rss",
+    "record_process_gauge",
 ]
 
 # 1e-6 … 1e2 seconds, 4 per decade: 33 bounds → 34 bucket slots (the last is
@@ -284,20 +285,38 @@ def peak_rss_mb() -> float:
     return peak / scale
 
 
-def record_peak_rss(registry, *, process_index: int | None = None, process_count: int | None = None) -> float:
-    """Surface this process's peak RSS as a process-indexed gauge.
+def record_process_gauge(
+    value: float,
+    registry,
+    name: str,
+    *,
+    process_index: int | None = None,
+    process_count: int | None = None,
+) -> float:
+    """Publish a per-process value as a process-indexed gauge family.
 
-    Registers ``process.peak_rss_mb.p{i}`` for EVERY process index — own
-    index carries the measured value, the others zero — so the sum-aggregated
-    global snapshot reads back each process's peak individually (this is the
-    registry-based replacement for the old stdout ``PEAK_RSS_MB:`` marker
-    parsing of multi-process benchmark logs). Returns the measured MB."""
+    Registers ``<name>.p{i}`` for EVERY process index — own index carries the
+    measured value, the others zero — so the sum-aggregated global snapshot
+    (``snapshot_global``'s one ``psum_host``) reads back each process's value
+    individually. This is the registry-based replacement for stdout-marker
+    parsing of multi-process benchmark logs; ``record_peak_rss`` and the
+    recovery drill's per-process lease ages ride on it. Returns ``value``."""
     if process_index is None or process_count is None:
         from .. import compat
 
         process_index = compat.process_index() if process_index is None else process_index
         process_count = compat.process_count() if process_count is None else process_count
-    mb = peak_rss_mb()
+    v = float(value)
     for i in range(int(process_count)):
-        registry.gauge(f"process.peak_rss_mb.p{i}").set(mb if i == int(process_index) else 0.0)
-    return mb
+        registry.gauge(f"{name}.p{i}").set(v if i == int(process_index) else 0.0)
+    return v
+
+
+def record_peak_rss(registry, *, process_index: int | None = None, process_count: int | None = None) -> float:
+    """Surface this process's peak RSS as the ``process.peak_rss_mb.p{i}``
+    process-indexed gauge family (see ``record_process_gauge``). Returns the
+    measured MB."""
+    return record_process_gauge(
+        peak_rss_mb(), registry, "process.peak_rss_mb",
+        process_index=process_index, process_count=process_count,
+    )

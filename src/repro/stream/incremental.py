@@ -198,6 +198,13 @@ class IncrementalOrderer:
                 spr = max(2, -(-int(np.ceil(raw * 1.25)) // 256) * 256)
         self._regions = int(regions)
         self._spr = int(spr)
+        # Checkpoint bookkeeping (DESIGN.md §15): a re-layout rewrites every
+        # region, invalidates slot-addressed recovery ops, and changes the
+        # chunk geometry the incremental snapshot addresses by — bump the
+        # epoch so the checkpoint layer forces a full snapshot.
+        self.layout_epoch = getattr(self, "layout_epoch", -1) + 1
+        self._dirty_regions: set[int] = set(range(int(regions)))
+        self._rec_ops: dict[int, tuple[int, int, bool]] = {}
         c = self.capacity
         self.slot_src = np.zeros(c, dtype=np.int64)
         self.slot_dst = np.zeros(c, dtype=np.int64)
@@ -357,6 +364,8 @@ class IncrementalOrderer:
             self._count(region, w, -1)
             self._deg_delta[w] = self._deg_delta.get(w, 0) - 1
         self._ops[s] = SlotOp(s, u, v, False)
+        self._rec_ops[s] = (u, v, False)
+        self._dirty_regions.add(region)
         return True
 
     def _insert(self, u: int, v: int) -> Optional[int]:
@@ -390,6 +399,8 @@ class IncrementalOrderer:
         self._deg_delta[u] = self._deg_delta.get(u, 0) + 1
         self._deg_delta[v] = self._deg_delta.get(v, 0) + 1
         self._ops[slot] = SlotOp(slot, u, v, True)
+        self._rec_ops[slot] = (u, v, True)
+        self._dirty_regions.add(region)
         return slot
 
     def _median_slot(self, u: int, v: int) -> Optional[int]:
@@ -490,6 +501,99 @@ class IncrementalOrderer:
         self._ops.clear()
         self._deg_delta.clear()
         return ops, deg
+
+    # --------------------------------------------------- checkpoint plumbing
+    def drain_dirty_regions(self) -> list[int]:
+        """Sorted region ids whose slot ranges changed since the last drain
+        (inserts, deletes, span rewrites; a re-layout marks ALL regions).
+        Consumed by the incremental checkpoint: snapshot cost is proportional
+        to the drained set, not the slot-array size."""
+        dirty = sorted(self._dirty_regions)
+        self._dirty_regions.clear()
+        return dirty
+
+    def drain_recovery_ops(self) -> list[tuple[int, int, int, bool]]:
+        """Coalesced ``(slot, u, v, valid)`` writes since the last drain, for
+        the checkpoint WAL. Independent of ``drain_ops`` (the device-mirror
+        stream): always on, and it DOES capture ``emit_ops=False`` span
+        rewrites, so replaying a WAL tail onto a snapshot reproduces the slot
+        array bit-exactly without re-running any placement or repair logic.
+        Meaningless across a re-layout — the checkpoint layer snapshots
+        instead (``layout_epoch``)."""
+        ops = [(s, uvw[0], uvw[1], uvw[2]) for s, uvw in self._rec_ops.items()]
+        ops.sort()
+        self._rec_ops.clear()
+        return ops
+
+    @classmethod
+    def from_slots(
+        cls,
+        slot_src: np.ndarray,
+        slot_dst: np.ndarray,
+        slot_valid: np.ndarray,
+        num_vertices: int,
+        *,
+        regions: int,
+        config: StreamConfig = StreamConfig(),
+        baseline_kappa: Optional[float] = None,
+        cooldown: int = 0,
+    ) -> "IncrementalOrderer":
+        """Reconstruct an orderer from a raw slot triple, preserving gaps and
+        tombstone positions EXACTLY (``__init__`` would re-spread the edges
+        and lose the layout). This is the checkpoint-restore path: all derived
+        bookkeeping (edge→slot map, incident sets, region counters, free
+        lists) is rebuilt from the arrays, and ``baseline_kappa`` /
+        ``cooldown`` re-inject the monitor control state so post-restore
+        escalation decisions replay identically to the pre-failure timeline."""
+        slot_src = np.array(slot_src, dtype=np.int64)
+        slot_dst = np.array(slot_dst, dtype=np.int64)
+        slot_valid = np.array(slot_valid, dtype=bool)
+        regions = int(regions)
+        if regions < 1:
+            raise ValueError("regions must be >= 1")
+        if slot_src.shape != slot_dst.shape or slot_src.shape != slot_valid.shape:
+            raise ValueError("slot arrays must share one shape")
+        if slot_src.ndim != 1 or slot_src.size % regions != 0:
+            raise ValueError(
+                f"slot capacity {slot_src.size} is not a multiple of regions={regions}"
+            )
+        o = cls.__new__(cls)
+        o.num_vertices = int(num_vertices)
+        o.config = config
+        o.needs_resync = False
+        o._cooldown = int(cooldown)
+        o._ops = {}
+        o._deg_delta = {}
+        o._rebuild_delta = None
+        o._regions = regions
+        o._spr = slot_src.size // regions
+        o.layout_epoch = 0
+        o._dirty_regions = set(range(regions))  # conservative: first snapshot is full
+        o._rec_ops = {}
+        o.slot_src = slot_src
+        o.slot_dst = slot_dst
+        o.slot_valid = slot_valid
+        occ = np.flatnonzero(slot_valid)
+        src_o = slot_src[occ]
+        dst_o = slot_dst[occ]
+        o._edge2slot = dict(zip(zip(src_o.tolist(), dst_o.tolist()), occ.tolist()))
+        if len(o._edge2slot) != occ.size:
+            raise ValueError("slot arrays hold duplicate edges")
+        p = occ // o._spr
+        o._rc = [dict() for _ in range(regions)]
+        o._rebuild_region_counts(0, regions, p, src_o, dst_o)
+        o._free = np.full(regions, o._spr, dtype=np.int64)
+        o._free -= np.bincount(p, minlength=regions)
+        o._free_cache = [None] * regions
+        o._gather_from = None
+        idx, ws, starts, ends = cls._vertex_groups(np.concatenate([src_o, dst_o]))
+        sslots = np.concatenate([occ, occ])[idx].tolist()
+        o._incident = {w: set(sslots[a:b]) for w, a, b in zip(ws, starts, ends)}
+        if baseline_kappa is None:
+            o._set_baseline()
+        else:
+            o._baseline_kappa = float(baseline_kappa)
+        return o
 
     def drain_gather_map(self) -> np.ndarray:
         """(capacity,) int64: for each slot of the CURRENT layout, the slot of
@@ -804,6 +908,20 @@ class IncrementalOrderer:
             for s_, a, b in zip(slots.tolist(), src_o.tolist(), dst_o.tolist()):
                 self._incident.setdefault(a, set()).add(s_)
                 self._incident.setdefault(b, set()).add(s_)
+        self._dirty_regions.update(range(r0, r1))
+        # Recovery ops: the span rewrite touched every slot of [lo, hi), and
+        # the device rung's emit_ops=False path bypasses ``_ops`` entirely —
+        # the checkpoint WAL must still see the writes (post-rewrite content).
+        self._rec_ops.update(
+            zip(
+                range(lo, hi),
+                zip(
+                    self.slot_src[lo:hi].tolist(),
+                    self.slot_dst[lo:hi].tolist(),
+                    self.slot_valid[lo:hi].tolist(),
+                ),
+            )
+        )
 
     def full_rebuild(self, seed: int = 0) -> None:
         """Escalation terminal: re-run geo_order on the current graph and

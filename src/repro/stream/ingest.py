@@ -161,6 +161,7 @@ class StreamingEngine:
         warm_scatter_caps: tuple = (),
         tracer=None,
         metrics_registry=None,
+        commit: str = "pack",
     ):
         if mesh is None:
             from ..launch import mesh as MM
@@ -172,6 +173,8 @@ class StreamingEngine:
             raise ValueError(f"unknown full_rebuild mode {full_rebuild!r}")
         if rebuild_flight < 0:
             raise ValueError("rebuild_flight must be >= 0")
+        if commit not in ("pack", "stream"):
+            raise ValueError(f"unknown commit mode {commit!r}")
         self.orderer = orderer
         self.mesh = mesh
         self.donate = donate
@@ -248,11 +251,32 @@ class StreamingEngine:
         self._m_resyncs = m.counter("stream.resyncs")
         self._m_edges = m.gauge("stream.num_edges")
         self._m_in_flight = m.gauge("stream.rebuilds_in_flight")
-        self.data = self._upload()
+        # commit="stream" builds the INITIAL pack shard-by-shard
+        # (pack_slots_sharded_stream): each process stages only the slot
+        # rows its devices own, never a full host pack — the recovery path's
+        # commit mode (a restored orderer re-homing onto a smaller surviving
+        # mesh must not require the dead cluster's per-host memory headroom).
+        # Steady-state resyncs after a re-layout still use the in-core
+        # upload; "stream" only changes how the FIRST pack is committed.
+        self.data = self._upload() if commit == "pack" else self._stream_upload()
         orderer.needs_resync = False
         self._warm_span_program()
         self._warm_full_program()
         self._warm_scatter_programs()
+
+    @classmethod
+    def from_restored(cls, orderer, mesh=None, **kwargs) -> "StreamingEngine":
+        """Build an engine around a checkpoint-restored orderer
+        (``checkpoint.SlotCheckpoint.restore``), committing the initial pack
+        via ``pack_slots_sharded_stream`` on the SURVIVING mesh — the
+        recovery half of DESIGN.md §15. The orderer's slot array is already
+        the recovered order (snapshot chunks + replayed WAL tail), so this is
+        purely a commit: partition p's slot range feeds the shard streamer
+        one region at a time, and only the rows this process's devices own
+        are ever staged. Ingest then continues exactly as on the original
+        cluster — the engine is indistinguishable from one that never died
+        (the fault drill asserts that bit-for-bit)."""
+        return cls(orderer, mesh, commit="stream", **kwargs)
 
     # ------------------------------------------------------------- plumbing
     @property
@@ -277,6 +301,21 @@ class StreamingEngine:
 
     def _upload(self) -> graph_engine.ShardedEngineData:
         return graph_engine.shard_engine_data(self.oracle_pack(), self.mesh)
+
+    def _stream_upload(self) -> graph_engine.ShardedEngineData:
+        """Shard-streamed initial commit (see ``from_restored``): region r's
+        slot range IS its CEP chunk, so the part_fn is a pure slice."""
+        o = self.orderer
+        spr = o.slots_per_region
+
+        def part_fn(p: int):
+            lo, hi = p * spr, (p + 1) * spr
+            return o.slot_src[lo:hi], o.slot_dst[lo:hi], o.slot_valid[lo:hi]
+
+        with self.tracer.span("ingest.stream_commit"):
+            return graph_engine.pack_slots_sharded_stream(
+                part_fn, o.regions, o.num_vertices, self.mesh, spr
+            )
 
     def _host_operand(self, arr):
         """Host-built program operand (scatter indices, gather maps). On a

@@ -1,0 +1,232 @@
+"""Per-process worker for the failure drill (tests/test_faults.py).
+
+Two modes, both launched by ``launch.multihost.launch_local_cluster``:
+
+* ``--mode live`` — a 2-process × 4-device cluster streams update batches
+  through the elastic controller. Every process stamps a ``LeaseBoard``
+  lease after each batch (the liveness heartbeat of DESIGN.md §15);
+  process 0 additionally runs a ``SlotCheckpoint`` so every batch is
+  durable (WAL record or interval snapshot). The PARENT test SIGKILLs
+  process 1 mid-stream — a preemption with no goodbye — which strands
+  process 0 in its next collective; the parent then abandons the whole
+  group (kill + reap) exactly like a real control plane would. The
+  checkpoint directory and the frozen lease stamps are all that survive,
+  and that is the point of the drill.
+
+* ``--mode recover`` — a FRESH 1-process × 4-device cluster (half the dead
+  one) cold-restores the orderer from the checkpoint (snapshot chunks +
+  replayed WAL tail), re-homes the pack onto the surviving mesh via
+  ``StreamingEngine.from_restored`` (shard-streamed commit), reports the
+  failure through ``ElasticController.report_failure`` — FailureEvent +
+  re-plan k 8 → 4 over the survivors — and then CONTINUES the remaining
+  batches by index (``SyntheticStream`` is a pure function of (seed, b)).
+  It writes the restore-point and final slot arrays plus the final device
+  pack to ``--out``; the parent proves both bit-identical to a host oracle
+  that replayed the same stream (and the same re-plan) without ever
+  failing — exactly-once recovery, not approximately-once.
+
+Escalation thresholds are parked high (``drill_config``) so the slot state
+is a pure function of (applied batches, rescales): the in-process property
+and boundary tests (test_faults.py) cover kill × ladder interleavings; the
+subprocess drill is about real SIGKILL, real lease expiry, real disk.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+from repro.launch import multihost as MH  # noqa: E402  (before jax device init)
+
+SPEC = MH.initialize_from_env()  # must run before the first jax computation
+
+import jax  # noqa: E402
+
+from repro.checkpoint import SlotCheckpoint  # noqa: E402
+from repro.core import ordering  # noqa: E402
+from repro.core.graph import rmat_graph  # noqa: E402
+from repro.elastic import controller as ec  # noqa: E402
+from repro.launch import mesh as MM  # noqa: E402
+from repro.obs import metrics as OM  # noqa: E402
+from repro.stream import IncrementalOrderer, StreamingEngine, SyntheticStream  # noqa: E402
+from repro.stream.incremental import StreamConfig  # noqa: E402
+
+GRAPH_SCALE = 7
+GRAPH_EDGE_FACTOR = 6
+GRAPH_SEED = 0
+STREAM_SEED = 3
+STREAM_BATCH = 64
+REGIONS = 8
+CKPT_INTERVAL = 3
+LEASE_S = 2.0
+# Per-batch throttle in live mode: the parent must win the race between
+# "victim reaches the kill step" and "stream runs out of batches".
+THROTTLE_S = 0.25
+
+
+def drill_config() -> StreamConfig:
+    """Escalation parked out of the way: the drill's slot state must be a
+    pure function of the applied batches + rescales so the parent's host
+    oracle replay is a plain ``apply`` loop."""
+    return StreamConfig(partial_drift=99.0, full_drift=999.0)
+
+
+def log(pid: int, msg: str) -> None:
+    print(f"[proc {pid}] {msg}", flush=True)
+
+
+def build_ordered():
+    g = rmat_graph(GRAPH_SCALE, GRAPH_EDGE_FACTOR, seed=GRAPH_SEED)
+    order = ordering.geo_order(g, seed=0)
+    return g, g.src[order].astype(np.int64), g.dst[order].astype(np.int64)
+
+
+def save_blocks(store: dict, name: str, arr) -> None:
+    for lo, hi, data in MH.local_shard_rows(arr):
+        store[f"{name}__{lo}__{hi}"] = data
+
+
+def run_live(args) -> None:
+    pid = jax.process_index()
+    g, src, dst = build_ordered()
+    mesh = MM.make_graph_mesh()
+    board = MH.LeaseBoard(os.path.join(args.dir, "leases"), lease_s=LEASE_S)
+    registry = OM.MetricsRegistry()
+    o = IncrementalOrderer(src, dst, g.num_vertices, regions=REGIONS, config=drill_config())
+    eng = StreamingEngine(o, mesh, metrics_registry=registry)
+    ctl = ec.ElasticController(REGIONS, metrics_registry=registry)
+    ctl.attach_stream(eng)
+    if pid == 0:
+        # One durability writer: process 0's orderer is a full deterministic
+        # replica, so its checkpoint covers the whole slot array. Process 1
+        # (the drill's victim) only stamps leases.
+        ctl.attach_checkpoint(
+            SlotCheckpoint(
+                os.path.join(args.dir, "ckpt"),
+                interval=CKPT_INTERVAL,
+                metrics_registry=registry,
+            )
+        )
+    stream = SyntheticStream(g, batch_size=STREAM_BATCH, seed=STREAM_SEED)
+    log(pid, f"live: {jax.process_count()} processes, {len(jax.devices())} global devices")
+    for step in range(args.batches):
+        ctl.ingest(stream.batch())
+        board.stamp(pid, step)
+        log(pid, f"live: batch {step} done, |E|={o.num_edges}")
+        time.sleep(THROTTLE_S)
+    # Reaching here means the parent never killed anyone — the drill failed
+    # upstream; record enough to make that diagnosable.
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, f"live_proc{pid}.json"), "w") as fh:
+        json.dump({"process_id": pid, "completed_all": True, "batches": args.batches}, fh)
+    log(pid, "live: DONE (never killed)")
+
+
+def run_recover(args) -> None:
+    pid = jax.process_index()
+    g, _, _ = build_ordered()
+    mesh = MM.make_graph_mesh()
+    registry = OM.MetricsRegistry()
+    lost = [int(h) for h in args.lost_hosts.split(",") if h != ""]
+    ck = SlotCheckpoint(
+        os.path.join(args.dir, "ckpt"), interval=CKPT_INTERVAL, metrics_registry=registry
+    )
+    t0 = time.perf_counter()
+    o, info = ck.restore(config=drill_config())
+    restore_s = time.perf_counter() - t0
+    last_durable = info["step"]
+    log(
+        pid,
+        f"recover: restored to batch {last_durable} "
+        f"(manifest {info['manifest_step']}, replayed {info['replayed']} WAL records, "
+        f"{info['bytes_read']} bytes)",
+    )
+    store: dict = {
+        "restore_src": o.slot_src.copy(),
+        "restore_dst": o.slot_dst.copy(),
+        "restore_valid": o.slot_valid.copy(),
+    }
+
+    t1 = time.perf_counter()
+    eng = StreamingEngine.from_restored(o, mesh, metrics_registry=registry)
+    commit_s = time.perf_counter() - t1
+    ctl = ec.ElasticController(REGIONS, metrics_registry=registry)
+    ctl.attach_stream(eng)
+    ctl.attach_checkpoint(ck)
+    ctl._batch_step = last_durable  # continue the durable step numbering
+    fev, sev = ctl.report_failure(
+        lost,
+        detect_s=args.detect_s,
+        reason="process lease expired (drill)",
+        restored_bytes=info["bytes_read"],
+        restore_s=restore_s,
+        replayed_records=info["replayed"],
+    )
+    log(pid, f"recover: failure shrink k {fev.k_old} -> {fev.k_new} executed={sev.executed}")
+
+    stream = SyntheticStream(g, batch_size=STREAM_BATCH, seed=STREAM_SEED)
+    for b in range(last_durable + 1):
+        stream.batch()  # regenerate (and discard) the already-durable prefix
+    for b in range(last_durable + 1, args.batches):
+        ctl.ingest(stream.batch(b))
+    eng.verify_bit_identity()
+    log(pid, f"recover: continued through batch {args.batches - 1}, k={eng.k}")
+
+    store["final_src"] = o.slot_src.copy()
+    store["final_dst"] = o.slot_dst.copy()
+    store["final_valid"] = o.slot_valid.copy()
+    save_blocks(store, "final_edges", eng.data.edges)
+    save_blocks(store, "final_mask", eng.data.mask)
+    peak_mb = OM.record_peak_rss(registry)
+    record = {
+        "process_id": pid,
+        "devices": len(jax.devices()),
+        "restore": dict(info),
+        "restore_s": restore_s,
+        "commit_s": commit_s,
+        "k_final": eng.k,
+        "num_edges": o.num_edges,
+        "failure_event": {
+            "lost_hosts": list(fev.lost_hosts),
+            "k_old": fev.k_old,
+            "k_new": fev.k_new,
+            "detect_s": fev.detect_s,
+            "restored_bytes": fev.restored_bytes,
+            "replayed_records": fev.replayed_records,
+            "seq": fev.seq,
+        },
+        "event_seqs": [ev.seq for ev in ctl.events],
+        "event_kinds": [ev.kind for ev in ctl.events],
+        "events_jsonl": ctl.events_jsonl(drop_timings=True),
+        "peak_rss_mb": peak_mb,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    np.savez(os.path.join(args.out, "recover.npz"), **store)
+    with open(os.path.join(args.out, "recover.json"), "w") as fh:
+        json.dump(record, fh, indent=2)
+    log(pid, "recover: DONE")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", required=True, choices=["live", "recover"])
+    ap.add_argument("--dir", required=True, help="shared checkpoint + lease directory")
+    ap.add_argument("--out", required=True, help="directory for result artifacts")
+    ap.add_argument("--batches", type=int, default=12)
+    ap.add_argument("--detect-s", type=float, default=0.0)
+    ap.add_argument("--lost-hosts", default="")
+    args = ap.parse_args()
+    if args.mode == "live":
+        run_live(args)
+    else:
+        run_recover(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -153,3 +153,106 @@ def test_tiny_tensor_survives_more_shards_than_elements(tmp_path):
     arrays, _ = store.restore(tmp_path, 0, k_new=2)
     np.testing.assert_array_equal(arrays["tiny"], tree["tiny"])
     assert arrays["scalar"].shape == () and float(arrays["scalar"]) == 2.5
+
+# -------------------------------------------------------------- error paths
+def test_restore_missing_step_is_typed(tmp_path, slots):
+    g, o = slots
+    store.save(orderer_tree(g, o), tmp_path, step=3, k_shards=2)
+    with pytest.raises(store.MissingStepError, match="step 9"):
+        store.restore(tmp_path, 9, k_new=2)
+    assert issubclass(store.MissingStepError, store.CheckpointError)
+
+
+def test_restore_mismatched_template_treedef(tmp_path, slots):
+    """A template whose treedef names different leaves must fail loudly with
+    BOTH sides of the diff — not silently reshape into the wrong pytree."""
+    g, o = slots
+    store.save(orderer_tree(g, o), tmp_path, step=0, k_shards=2)
+    bad = {"slot": {"src": o.slot_src, "dst": o.slot_dst}, "extra": np.zeros(3)}
+    with pytest.raises(store.TemplateMismatchError) as ei:
+        store.restore(tmp_path, 0, k_new=2, template=bad)
+    assert "extra" in str(ei.value) and "slot/valid" in str(ei.value)
+
+
+def test_restore_missing_shard_file(tmp_path, slots):
+    g, o = slots
+    d = store.save(orderer_tree(g, o), tmp_path, step=1, k_shards=3)
+    (d / "shard_1.npz").unlink()
+    with pytest.raises(store.CorruptShardError, match="shard_1.npz missing"):
+        store.restore(tmp_path, 1, k_new=3)
+
+
+def test_restore_truncated_shard_file(tmp_path, slots):
+    """A partially written shard (torn npz) is CorruptShardError, never a raw
+    zipfile/np.load exception leaking through."""
+    g, o = slots
+    d = store.save(orderer_tree(g, o), tmp_path, step=1, k_shards=3)
+    blob = (d / "shard_2.npz").read_bytes()
+    (d / "shard_2.npz").write_bytes(blob[: len(blob) // 2])
+    with pytest.raises(store.CorruptShardError, match="shard_2.npz"):
+        store.restore(tmp_path, 1, k_new=3)
+
+
+def test_restore_wrong_chunk_shape(tmp_path, slots):
+    """A shard whose chunk length disagrees with the manifest bounds is
+    corrupt even when the npz itself parses."""
+    g, o = slots
+    d = store.save(orderer_tree(g, o), tmp_path, step=2, k_shards=2)
+    with np.load(d / "shard_0.npz") as z:
+        tensors = {n: z[n] for n in z.files}
+    tensors["slot/src"] = tensors["slot/src"][:-1]
+    np.savez(d / "shard_0.npz", **tensors)
+    with pytest.raises(store.CorruptShardError, match="manifest chunk"):
+        store.restore(tmp_path, 2, k_new=2)
+
+
+def test_slot_checkpoint_restore_without_manifest(tmp_path):
+    ck = store.SlotCheckpoint(tmp_path)
+    with pytest.raises(store.MissingStepError, match="no manifest"):
+        ck.restore()
+
+
+def _fresh_ck_pipeline(tmp_path, slots, interval=2):
+    g, o_seed = slots
+    o = IncrementalOrderer(
+        o_seed.slot_src[o_seed.slot_valid].copy(),
+        o_seed.slot_dst[o_seed.slot_valid].copy(),
+        g.num_vertices, regions=4,
+    )
+    ck = store.SlotCheckpoint(tmp_path, interval=interval)
+    stream = SyntheticStream(g, batch_size=32, delete_frac=0.3, seed=7)
+    for step in range(4):
+        b = stream.batch()
+        o.apply(b)
+        o.needs_resync = False
+        o.drain_ops()
+        ck.note_batch(o, b, step)
+    return o, ck
+
+
+def test_slot_checkpoint_missing_chunk_file(tmp_path, slots):
+    o, ck = _fresh_ck_pipeline(tmp_path, slots)
+    victim = next(tmp_path.glob("chunk_r2_s*.npz"))
+    victim.unlink()
+    with pytest.raises(store.CorruptShardError, match="chunk_r2"):
+        store.SlotCheckpoint(tmp_path).restore()
+
+
+def test_slot_checkpoint_truncated_chunk_file(tmp_path, slots):
+    o, ck = _fresh_ck_pipeline(tmp_path, slots)
+    victim = next(tmp_path.glob("chunk_r1_s*.npz"))
+    blob = victim.read_bytes()
+    victim.write_bytes(blob[: len(blob) // 2])
+    with pytest.raises(store.CorruptShardError, match="unreadable"):
+        store.SlotCheckpoint(tmp_path).restore()
+
+
+def test_slot_checkpoint_manifest_missing_region(tmp_path, slots):
+    o, ck = _fresh_ck_pipeline(tmp_path, slots)
+    m = max(tmp_path.glob("manifest_*.json"),
+            key=lambda p: int(p.stem.split("_")[1]))
+    doc = json.loads(m.read_text())
+    del doc["chunk_step"]["3"]
+    m.write_text(json.dumps(doc))
+    with pytest.raises(store.CorruptShardError, match="lacks region 3"):
+        store.SlotCheckpoint(tmp_path).restore()
